@@ -1,0 +1,91 @@
+"""Pool-server scalability (paper §2 'Scalability': the non-blocking
+single-threaded server serves many volunteer requests; the limit 'so far
+has not been found').
+
+We measure (a) host PoolServer request throughput vs concurrent clients
+(threaded PUT/GET mix — the HTTP analogue), and (b) device-pool migration
+throughput vs island count (epoch_step including all_gather-style PUT/GET
+on the padded island batch).
+"""
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.core import (EAConfig, MigrationConfig, PoolServer, make_trap)
+from repro.core import evolution, island as island_lib, pool as pool_lib
+
+
+def bench_host_pool(clients_list=(1, 2, 4, 8), requests: int = 2000,
+                    genome_len: int = 160) -> List[Dict]:
+    rows = []
+    for n_clients in clients_list:
+        server = PoolServer(capacity=1024)
+        server.put(np.zeros(genome_len), 0.0)  # avoid empty-pool raises
+        done = []
+
+        def worker(uid):
+            g = np.random.default_rng(uid).integers(
+                0, 2, genome_len).astype(np.int8)
+            for i in range(requests // n_clients):
+                server.put(g, float(i), uuid=uid)
+                server.get_random()
+            done.append(uid)
+
+        threads = [threading.Thread(target=worker, args=(u,))
+                   for u in range(n_clients)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        dt = time.perf_counter() - t0
+        total_reqs = 2 * (requests // n_clients) * n_clients
+        rows.append({"mode": "host", "clients": n_clients,
+                     "requests_per_s": total_reqs / dt})
+    return rows
+
+
+def bench_device_pool(island_counts=(4, 16, 64), epochs: int = 3) -> List[Dict]:
+    problem = make_trap(n_traps=10, l=4)
+    cfg = EAConfig(max_pop=128, min_pop=64, generations_per_epoch=10)
+    mig = MigrationConfig(pool_capacity=64)
+    rows = []
+    for n in island_counts:
+        islands = island_lib.init_islands(jax.random.key(0), n, problem, cfg)
+        pool = pool_lib.pool_init(mig.pool_capacity, problem.genome)
+        step = jax.jit(lambda i, q, k: evolution.epoch_step(
+            i, q, k, problem, cfg, mig, False, True))
+        islands, pool = step(islands, pool, jax.random.key(1))  # compile
+        t0 = time.perf_counter()
+        for e in range(epochs):
+            islands, pool = step(islands, pool, jax.random.key(2 + e))
+        jax.block_until_ready(islands.best_fitness)
+        dt = time.perf_counter() - t0
+        migs = n * epochs
+        gens = n * epochs * cfg.generations_per_epoch
+        rows.append({"mode": "device", "islands": n,
+                     "migrations_per_s": migs / dt,
+                     "generations_per_s": gens / dt})
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=2000)
+    args = ap.parse_args(argv)
+    print("mode,clients_or_islands,requests_or_migrations_per_s")
+    for r in bench_host_pool(requests=args.requests):
+        print(f"host,{r['clients']},{r['requests_per_s']:.0f}")
+    for r in bench_device_pool():
+        print(f"device,{r['islands']},{r['migrations_per_s']:.1f}"
+              f"  (gens/s {r['generations_per_s']:.0f})")
+
+
+if __name__ == "__main__":
+    main()

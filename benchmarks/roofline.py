@@ -1,0 +1,131 @@
+"""Roofline analysis over the dry-run artifacts (TPU v5e targets).
+
+Reads benchmarks/results/dryrun/*.json (written by repro.launch.dryrun) and
+derives, per (arch x shape) on the single-pod mesh:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs      [s]
+    memory term     = HLO_bytes_per_device / HBM_bw          [s]
+    collective term = wire_bytes_per_device / ICI_bw         [s]
+
+(The dry-run HLO module is the per-device SPMD program, so its cost numbers
+are already per-device; scan bodies are extrapolated by the dry-run's
+two-point unroll method.) The dominant term is the bottleneck; MODEL_FLOPS
+(6·N·D dense / 6·N_active·D MoE for training, 2·N·D for serving) over
+HLO_FLOPs measures how much compiled compute is useful (remat/dispatch
+overheads push it below 1).
+
+Hardware constants: 197 bf16 TFLOP/s, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def model_flops_per_device(rec: Dict) -> Optional[float]:
+    """Analytic useful FLOPs per device for the cell."""
+    from repro.configs import get_config
+    from repro.launch.input_specs import SHAPES
+
+    cfg = get_config(rec["arch"])
+    total, active = cfg.param_count()
+    info = SHAPES[rec["shape"]]
+    kind = info["kind"]
+    n_chips = 512 if rec["mesh"] == "2x16x16" else 256
+    if kind == "train":
+        tokens = info["seq"] * info["batch"]
+        return 6.0 * active * tokens / n_chips
+    if kind == "prefill":
+        tokens = info["seq"] * info["batch"]
+        return 2.0 * active * tokens / n_chips
+    # decode: one token per sequence
+    return 2.0 * active * info["batch"] / n_chips
+
+
+def analyze(rec: Dict) -> Optional[Dict]:
+    if not rec.get("supported") or "hlo_flops_per_device" not in rec:
+        return None
+    mf = model_flops_per_device(rec)
+    note = ""
+    flops = rec["hlo_flops_per_device"]
+    if flops <= rec.get("raw_u1", {}).get("flops", 0):
+        # two-point unroll delta came out non-linear (XLA fused the
+        # doubled body differently) — fall back to the analytic count at
+        # a typical 0.8 useful-ratio, and say so.
+        flops = mf / 0.8
+        rec = dict(rec, hlo_flops_per_device=flops)
+        note = "flops~analytic (unroll extrapolation non-linear)"
+    compute = flops / PEAK_FLOPS
+    memory = rec["hlo_bytes_per_device"] / HBM_BW
+    wire = rec["collective_bytes_per_device"].get("total", 0.0)
+    collective = wire / ICI_BW
+    terms = {"compute": compute, "memory": memory, "collective": collective}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": compute, "memory_s": memory, "collective_s": collective,
+        "dominant": dominant,
+        "model_flops_per_device": mf,
+        "useful_ratio": (mf / rec["hlo_flops_per_device"]
+                         if rec["hlo_flops_per_device"] else None),
+        # roofline fraction: ideal compute time over the binding term
+        "roofline_fraction": (mf / PEAK_FLOPS) / bound if bound else None,
+        "peak_gib_per_device": rec["peak_bytes_per_device"] / 2**30,
+        "accum": rec.get("accum"),
+        "note": note,
+        "collectives": {k: v for k, v in
+                        rec["collective_bytes_per_device"].items()
+                        if k != "total"},
+    }
+
+
+def load_records(mesh: str = "16x16") -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("mesh") == mesh and not rec.get("tag"):
+            out.append(rec)   # tagged records are hillclimb probes
+    return out
+
+
+def table(mesh: str = "16x16") -> List[str]:
+    rows = ["arch,shape,compute_s,memory_s,collective_s,dominant,"
+            "roofline_frac,useful_ratio,peak_GiB,note"]
+    for rec in load_records(mesh):
+        if not rec.get("supported"):
+            rows.append(f"{rec['arch']},{rec['shape']},,,,skipped,,,,"
+                        f"\"{rec['skip_reason']}\"")
+            continue
+        a = analyze(rec)
+        if a is None:
+            rows.append(f"{rec['arch']},{rec['shape']},,,,compiled-only,,,"
+                        f"{rec['peak_bytes_per_device']/2**30:.2f},")
+            continue
+        rows.append(
+            f"{a['arch']},{a['shape']},{a['compute_s']:.3f},"
+            f"{a['memory_s']:.3f},{a['collective_s']:.3f},{a['dominant']},"
+            f"{a['roofline_fraction']:.3f},{a['useful_ratio']:.3f},"
+            f"{a['peak_gib_per_device']:.2f},{a['note']}")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args(argv)
+    print("\n".join(table(args.mesh)))
+
+
+if __name__ == "__main__":
+    main()

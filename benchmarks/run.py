@@ -1,0 +1,69 @@
+"""Benchmark orchestrator — one section per paper table/figure + roofline.
+
+Prints ``name,value,derived`` CSV blocks. Flags trim runtimes for CI; the
+full paper-scale settings are documented per module.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale settings (50 trap runs etc.)")
+    ap.add_argument("--skip", nargs="*", default=[],
+                    choices=["fig3", "fig4", "pool", "roofline"])
+    args = ap.parse_args(argv)
+    t0 = time.time()
+
+    if "fig3" not in args.skip:
+        print("== Fig 3: trap-40 baseline (time/evals to solution) ==")
+        from benchmarks import fig3_trap
+        rows = fig3_trap.run(runs=50 if args.full else 8,
+                             max_evals=5_000_000,   # the paper's budget
+                             verbose=False)
+        print("\n".join(fig3_trap.summarize(rows)))
+        print()
+
+    if "fig4" not in args.skip:
+        print("== Fig 4: F15 10k-evaluation runtime ==")
+        from benchmarks import fig4_f15
+        rows = fig4_f15.bench(n_evals=10_000,       # the paper's workload
+                              include_loop=True,
+                              include_pallas=True)
+        print("\n".join(fig4_f15.summarize(rows)))
+        print()
+
+    if "pool" not in args.skip:
+        print("== Pool scalability (paper §2) ==")
+        from benchmarks import pool_throughput
+        for r in pool_throughput.bench_host_pool(
+                requests=4000 if args.full else 800):
+            print(f"host_pool,{r['clients']}_clients,"
+                  f"{r['requests_per_s']:.0f}_req/s")
+        for r in pool_throughput.bench_device_pool(
+                island_counts=(4, 16, 64) if args.full else (4, 16)):
+            print(f"device_pool,{r['islands']}_islands,"
+                  f"{r['generations_per_s']:.0f}_gens/s")
+        print()
+
+    if "roofline" not in args.skip:
+        print("== Roofline (from dry-run artifacts; see EXPERIMENTS.md) ==")
+        from benchmarks import roofline
+        try:
+            rows = roofline.table("16x16")
+            print("\n".join(rows) if len(rows) > 1
+                  else "no dry-run artifacts yet — run "
+                       "`python -m repro.launch.dryrun --all` first")
+        except Exception as e:  # noqa: BLE001
+            print(f"roofline unavailable: {e}")
+        print()
+
+    print(f"total benchmark wall time: {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

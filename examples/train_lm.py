@@ -1,0 +1,66 @@
+"""End-to-end LM training driver: train a ~100M-param model for a few
+hundred steps on the synthetic corpus, with checkpoints + resume.
+
+    PYTHONPATH=src python examples/train_lm.py            # ~100M, 300 steps
+    PYTHONPATH=src python examples/train_lm.py --tiny     # CI-sized
+
+The synthetic corpus has real conditional structure (see repro.data), so
+cross-entropy drops well below uniform — the printed curve is the proof
+the whole stack (model/optimizer/data/checkpoint) trains.
+"""
+import argparse
+import dataclasses
+import os
+import tempfile
+
+from repro.configs import get_config
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--arch", default="minicpm-2b")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    ckpt = args.ckpt_dir or os.path.join(tempfile.gettempdir(),
+                                         "repro_train_lm")
+    if args.tiny:
+        steps = args.steps or 60
+        state, losses = train(args.arch, smoke=True, steps=steps, batch=8,
+                              seq=64, lr=3e-3, ckpt_dir=ckpt,
+                              ckpt_every=max(steps // 2, 1),
+                              resume=args.resume)
+    else:
+        # ~100M: scale the arch family to a 12-layer/768-wide variant
+        from repro.models import build_model
+        cfg = get_config(args.arch, smoke=True)
+        cfg = dataclasses.replace(
+            cfg, n_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+            head_dim=64, d_ff=2048, vocab_size=32000,
+            name=cfg.name + "-100m")
+        print(f"config: {cfg.name}  params ~ "
+              f"{build_model(cfg).param_count()/1e6:.0f}M")
+        import repro.launch.train as T
+
+        def cfg_get(name, smoke=True):
+            return cfg
+
+        T.get_config = cfg_get   # inject the scaled config
+        steps = args.steps or 300
+        state, losses = T.train(args.arch, smoke=True, steps=steps,
+                                batch=16, seq=256, lr=6e-4, ckpt_dir=ckpt,
+                                ckpt_every=100, resume=args.resume)
+    import math
+    uniform = math.log(32000 if not args.tiny else 256)
+    print(f"\nce curve: start {losses[0]:.3f} -> end {losses[-1]:.3f} "
+          f"(uniform = {uniform:.2f})")
+    assert losses[-1] < losses[0], "training must reduce loss"
+    print(f"checkpoints in {ckpt} (rerun with --resume to continue)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Inject generated tables into EXPERIMENTS.md from bench_output.txt and
+the dry-run artifacts. Idempotent (placeholders survive as anchors)."""
+import re
+import sys
+
+sys.path.insert(0, "src")
+
+
+def block_from_bench(bench_text: str, header: str) -> str:
+    """Extract the CSV lines under a '== ... ==' header."""
+    lines = bench_text.splitlines()
+    out, active = [], False
+    for ln in lines:
+        if ln.startswith("== "):
+            active = header in ln
+            continue
+        if active:
+            if not ln.strip():
+                break
+            out.append(ln)
+    return "\n".join(out)
+
+
+def csv_to_md(csv_text: str) -> str:
+    rows = [r for r in csv_text.splitlines() if r.strip()]
+    if not rows:
+        return "_(run `python -m benchmarks.run` to populate)_"
+    cells = [r.split(",") for r in rows]
+    width = max(len(c) for c in cells)
+    cells = [c + [""] * (width - len(c)) for c in cells]
+    md = ["| " + " | ".join(cells[0]) + " |",
+          "|" + "---|" * width]
+    md += ["| " + " | ".join(c) + " |" for c in cells[1:]]
+    return "\n".join(md)
+
+
+def main():
+    try:
+        bench = open("bench_output.txt").read()
+    except FileNotFoundError:
+        bench = ""
+    from benchmarks import roofline
+    roof = "\n".join(roofline.table("16x16"))
+
+    doc = open("EXPERIMENTS.md").read()
+
+    def put(anchor: str, content: str) -> None:
+        nonlocal doc
+        pat = re.compile(f"<!--{anchor}-->.*?(?=\n\n|$)", re.S)
+        block = f"<!--{anchor}-->\n{content}"
+        if f"<!--{anchor}-->" in doc:
+            doc = pat.sub(lambda m: block, doc, count=1)
+
+    put("FIG3", csv_to_md(block_from_bench(bench, "Fig 3")))
+    put("FIG4", csv_to_md(block_from_bench(bench, "Fig 4")))
+    put("POOL", csv_to_md(block_from_bench(bench, "Pool scalability")))
+    put("ROOFLINE", csv_to_md(roof))
+    open("EXPERIMENTS.md", "w").write(doc)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

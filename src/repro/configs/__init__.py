@@ -1,0 +1,46 @@
+"""Architecture config registry — one module per assigned architecture.
+
+``get_config(name)`` returns the exact published configuration;
+``get_config(name, smoke=True)`` returns the reduced same-family variant
+used by CPU smoke tests. ``ARCHS`` lists all assigned ids.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.common import ModelConfig
+
+ARCHS: List[str] = [
+    "seamless-m4t-large-v2",
+    "dbrx-132b",
+    "olmoe-1b-7b",
+    "granite-34b",
+    "yi-9b",
+    "qwen3-32b",
+    "minicpm-2b",
+    "llama-3.2-vision-90b",
+    "rwkv6-3b",
+    "hymba-1.5b",
+]
+
+_MODULES: Dict[str, str] = {
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "dbrx-132b": "dbrx_132b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "granite-34b": "granite_34b",
+    "yi-9b": "yi_9b",
+    "qwen3-32b": "qwen3_32b",
+    "minicpm-2b": "minicpm_2b",
+    "llama-3.2-vision-90b": "llama32_vision_90b",
+    "rwkv6-3b": "rwkv6_3b",
+    "hymba-1.5b": "hymba_1_5b",
+}
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; have {ARCHS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    cfg: ModelConfig = mod.CONFIG
+    return cfg.reduced() if smoke else cfg

@@ -1,0 +1,23 @@
+"""rwkv6-3b [ssm] — Finch: attention-free, data-dependent decay.
+
+Assigned: 32L d_model=2560 (attn-free) d_ff=8960 vocab=65536.
+[arXiv:2404.05892; hf]
+
+40 WKV heads of size 64; O(1) recurrent state per layer makes the 512k
+long-context decode cell honest (state, not KV cache). The chunked Pallas
+WKV kernel is the TPU hot loop (repro.kernels.rwkv6).
+"""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b",
+    family="ssm",
+    n_layers=32,
+    d_model=2560,
+    n_heads=40,          # wkv heads (d_model/64)
+    n_kv_heads=40,
+    head_dim=64,
+    d_ff=8960,
+    vocab_size=65536,
+    rwkv_decay_lora=64,
+)

@@ -1,0 +1,26 @@
+"""repro.core — the paper's contribution: pool-based volunteer evolution.
+
+Public API:
+    problems.make_problem / make_trap / make_f15 / ...
+    EAConfig, MigrationConfig, IslandState, PoolState
+    island.init_islands / island_epoch
+    pool.pool_init / migrate_batch / migrate_sharded
+    evolution.run_experiment / run_fused
+    sharded.run_sharded
+    async_pool.PoolServer / PoolClient
+"""
+from .types import (EAConfig, ExperimentStats, GenomeSpec, IslandState,
+                    MigrationConfig, PoolState)
+from .problems import (Problem, make_f15, make_onemax, make_problem,
+                       make_rastrigin, make_sphere, make_trap)
+from . import ga, island, pool, evolution, sharded
+from .async_pool import PoolClient, PoolServer, PoolUnavailable
+from .evolution import RunResult, run_experiment, run_fused
+
+__all__ = [
+    "EAConfig", "ExperimentStats", "GenomeSpec", "IslandState",
+    "MigrationConfig", "PoolState", "Problem", "make_f15", "make_onemax",
+    "make_problem", "make_rastrigin", "make_sphere", "make_trap", "ga",
+    "island", "pool", "evolution", "sharded", "PoolClient", "PoolServer",
+    "PoolUnavailable", "RunResult", "run_experiment", "run_fused",
+]

@@ -1,0 +1,221 @@
+"""Host-side pool server with the paper's REST semantics.
+
+This is the faithful analogue of NodIO's Node.js/Express server: a CRUD
+chromosome store with PUT(best)/GET(random), per-experiment reset, UUID
+tracking and logging duties — implemented as a thread-safe in-process object
+(optionally file-journaled) instead of HTTP. It intermediates *processes*
+(volunteer islands running anywhere: other hosts, other pods, CPU workers),
+while ``core.pool`` intermediates *devices*.
+
+Failure semantics are first-class: ``kill()``/``revive()`` emulate server
+loss; clients see :class:`PoolUnavailable` and are expected to continue
+evolving standalone (the paper's fault-tolerance property — covered by
+tests/test_fault.py and examples/volunteer_sim.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import random
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class PoolUnavailable(ConnectionError):
+    """Raised when the server is down — clients must tolerate this."""
+
+
+@dataclass
+class PoolEntry:
+    genome: np.ndarray
+    fitness: float
+    uuid: int
+    experiment: int
+    timestamp: float = field(default_factory=time.time)
+    payload: Any = None      # opaque side-data (PBT weights / ckpt path)
+
+
+class PoolServer:
+    """Thread-safe chromosome pool with REST-like verbs.
+
+    Routes (paper §2):
+      PUT /chromosome      -> put(genome, fitness, uuid)
+      GET /random          -> get_random()
+      GET /best            -> get_best()
+      DELETE /experiment   -> reset() (solution found -> next experiment)
+      GET /stats           -> stats()
+    """
+
+    def __init__(self, capacity: int = 1024, journal_path: Optional[str] = None,
+                 seed: int = 0):
+        self._lock = threading.Lock()
+        self._capacity = capacity
+        self._entries: List[PoolEntry] = []
+        self._rng = random.Random(seed)
+        self._up = True
+        self._experiment = 0
+        self._n_puts = 0
+        self._n_gets = 0
+        self._best: Optional[PoolEntry] = None
+        self._journal_path = journal_path
+        self._journal = open(journal_path, "a") if journal_path else None
+
+    # -- failure injection --------------------------------------------------
+    def kill(self) -> None:
+        with self._lock:
+            self._up = False
+
+    def revive(self) -> None:
+        with self._lock:
+            self._up = True
+
+    @property
+    def up(self) -> bool:
+        return self._up
+
+    def _check_up(self) -> None:
+        if not self._up:
+            raise PoolUnavailable("pool server is down")
+
+    # -- REST verbs ----------------------------------------------------------
+    def put(self, genome: Any, fitness: float, uuid: int = 0) -> int:
+        """PUT a chromosome. Returns the current experiment number."""
+        self._check_up()
+        entry = PoolEntry(np.asarray(genome), float(fitness), int(uuid),
+                          self._experiment)
+        with self._lock:
+            self._check_up()
+            self._n_puts += 1
+            if len(self._entries) >= self._capacity:
+                # ring behaviour: drop the oldest
+                self._entries.pop(0)
+            self._entries.append(entry)
+            if self._best is None or entry.fitness > self._best.fitness:
+                self._best = entry
+            self._log({"op": "put", "uuid": entry.uuid,
+                       "fitness": entry.fitness, "exp": self._experiment})
+            return self._experiment
+
+    def put_with_payload(self, genome: Any, fitness: float, uuid: int = 0,
+                         payload: Any = None) -> int:
+        """PUT with opaque side-data (PBT weight snapshots / ckpt paths)."""
+        self._check_up()
+        entry = PoolEntry(np.asarray(genome), float(fitness), int(uuid),
+                          self._experiment, payload=payload)
+        with self._lock:
+            self._check_up()
+            self._n_puts += 1
+            if len(self._entries) >= self._capacity:
+                self._entries.pop(0)
+            self._entries.append(entry)
+            if self._best is None or entry.fitness > self._best.fitness:
+                self._best = entry
+            self._log({"op": "put", "uuid": entry.uuid,
+                       "fitness": entry.fitness, "exp": self._experiment})
+            return self._experiment
+
+    def get_random_entry(self) -> Optional[PoolEntry]:
+        """GET a random entry with metadata/payload (None when empty)."""
+        self._check_up()
+        with self._lock:
+            self._check_up()
+            self._n_gets += 1
+            if not self._entries:
+                return None
+            e = self._rng.choice(self._entries)
+            self._log({"op": "get", "fitness": e.fitness})
+            return e
+
+    def get_random(self) -> Tuple[np.ndarray, float]:
+        """GET a uniformly random chromosome (paper's migration GET)."""
+        self._check_up()
+        with self._lock:
+            self._check_up()
+            self._n_gets += 1
+            if not self._entries:
+                raise PoolUnavailable("pool is empty")
+            e = self._rng.choice(self._entries)
+            self._log({"op": "get", "fitness": e.fitness})
+            return e.genome.copy(), e.fitness
+
+    def get_best(self) -> Tuple[np.ndarray, float]:
+        self._check_up()
+        with self._lock:
+            if self._best is None:
+                raise PoolUnavailable("pool is empty")
+            return self._best.genome.copy(), self._best.fitness
+
+    def reset(self) -> int:
+        """Solution found: clear the pool, bump the experiment counter."""
+        self._check_up()
+        with self._lock:
+            self._entries.clear()
+            self._best = None
+            self._experiment += 1
+            self._log({"op": "reset", "exp": self._experiment})
+            return self._experiment
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "up": self._up,
+                "size": len(self._entries),
+                "capacity": self._capacity,
+                "experiment": self._experiment,
+                "puts": self._n_puts,
+                "gets": self._n_gets,
+                "best_fitness": None if self._best is None else self._best.fitness,
+            }
+
+    # -- logging duties (the server "performs logging duties", §2) ----------
+    def _log(self, rec: Dict[str, Any]) -> None:
+        if self._journal is not None:
+            rec["t"] = time.time()
+            self._journal.write(json.dumps(rec) + "\n")
+            self._journal.flush()
+
+    def close(self) -> None:
+        if self._journal is not None:
+            self._journal.close()
+            self._journal = None
+
+
+class PoolClient:
+    """A volunteer client's view of the server: never raises on failure.
+
+    ``put``/``get_random`` return success flags / None instead of raising —
+    exactly the browser behaviour of a lost XHR: the island just keeps
+    evolving and retries at the next migration point.
+    """
+
+    def __init__(self, server: PoolServer, uuid: int = 0):
+        self._server = server
+        self.uuid = uuid
+        self.lost_puts = 0
+        self.lost_gets = 0
+
+    def put(self, genome: Any, fitness: float) -> bool:
+        try:
+            self._server.put(genome, fitness, uuid=self.uuid)
+            return True
+        except PoolUnavailable:
+            self.lost_puts += 1
+            return False
+
+    def get_random(self) -> Optional[Tuple[np.ndarray, float]]:
+        try:
+            return self._server.get_random()
+        except PoolUnavailable:
+            self.lost_gets += 1
+            return None
+
+    def reset(self) -> bool:
+        try:
+            self._server.reset()
+            return True
+        except PoolUnavailable:
+            return False

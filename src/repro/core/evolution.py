@@ -1,0 +1,209 @@
+"""The NodIO experiment loop: islands × pool, epochs of autonomous evolution.
+
+Two drivers:
+
+* :func:`run_experiment` — host-level loop around a jitted
+  ``(epoch + migrate)`` step. This is the faithful NodIO shape: the host loop
+  is where volunteer churn, server failure, host-pool interop and logging
+  live (exactly the concerns the paper handles over HTTP).
+* :func:`run_fused` — the whole experiment as one ``lax.while_loop`` for
+  maximum device throughput (the "all islands on one pod" configuration);
+  used by the performance benchmarks.
+
+Both operate on a *batch* of islands (leading axis) and support the W²
+variant: restart-on-solution + heterogeneous population sizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import island as island_lib
+from . import pool as pool_lib
+from .problems import Problem
+from .types import (Array, EAConfig, ExperimentStats, IslandState,
+                    MigrationConfig, PoolState)
+
+
+# ---------------------------------------------------------------------------
+# One epoch: autonomous evolution + PUT/GET migration (+ W² restart)
+# ---------------------------------------------------------------------------
+def epoch_step(islands: IslandState, pool: PoolState, rng: Array,
+               problem: Problem, cfg: EAConfig, mig: MigrationConfig,
+               w2: bool, available: Array | bool) -> Tuple[IslandState, PoolState]:
+    islands = jax.vmap(lambda s: island_lib.island_epoch(s, problem, cfg))(islands)
+
+    pool, imm_g, imm_f = pool_lib.migrate_batch(
+        pool, islands.best_genome, islands.best_fitness, rng,
+        available=available)
+    islands = jax.vmap(
+        partial(island_lib.receive_immigrant, replace=mig.replace)
+    )(islands, imm_g, imm_f)
+
+    if w2:
+        succeeded = _success_mask(islands, problem, cfg)
+        restarted = jax.vmap(
+            lambda s: island_lib.restart_island(s, problem, cfg))(islands)
+        islands = jax.tree.map(
+            lambda r, o: jnp.where(
+                _bcast(succeeded, r.ndim), r, o), restarted, islands)
+    return islands, pool
+
+
+def _bcast(mask: Array, ndim: int) -> Array:
+    return mask.reshape(mask.shape + (1,) * (ndim - 1))
+
+
+def _success_mask(islands: IslandState, problem: Problem,
+                  cfg: EAConfig) -> Array:
+    if problem.optimum is None:
+        return jnp.zeros_like(islands.done)
+    return islands.best_fitness >= problem.optimum - cfg.success_eps
+
+
+def collect_stats(islands: IslandState, epoch: int) -> ExperimentStats:
+    return ExperimentStats(
+        epoch=jnp.int32(epoch),
+        best_fitness=islands.best_fitness.max(),
+        mean_best=islands.best_fitness.mean(),
+        total_evaluations=islands.evaluations.sum(),
+        n_done=islands.done.sum(),
+        experiments_solved=islands.experiments.sum(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Host-level driver (faithful NodIO shape)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class RunResult:
+    islands: IslandState
+    pool: PoolState
+    stats: List[ExperimentStats]
+    success: bool
+    epochs: int
+    wall_time_s: float
+    evaluations: int
+    # evaluations summed over islands at the first epoch with a success
+    evaluations_to_solution: Optional[int] = None
+
+
+def run_experiment(problem: Problem,
+                   cfg: EAConfig = EAConfig(),
+                   mig: MigrationConfig = MigrationConfig(),
+                   n_islands: int = 8,
+                   max_epochs: int = 100,
+                   rng: Optional[Array] = None,
+                   w2: bool = False,
+                   server_up: Optional[Callable[[int], bool]] = None,
+                   host_pool=None,
+                   stop_on_success: bool = True,
+                   verbose: bool = False) -> RunResult:
+    """Run a NodIO experiment.
+
+    server_up(epoch) -> bool lets tests/benchmarks kill the pool server for
+    arbitrary epochs (paper §2, fault tolerance). ``host_pool`` (a
+    core.async_pool.PoolServer) — when given, migration additionally goes
+    through the host REST-semantics pool, mixing device islands with any
+    external volunteer clients attached to the same server.
+    """
+    rng = jax.random.key(0) if rng is None else rng
+    k_init, rng = jax.random.split(rng)
+    islands = island_lib.init_islands(k_init, n_islands, problem, cfg)
+    dpool = pool_lib.pool_init(mig.pool_capacity, problem.genome)
+
+    step = jax.jit(partial(epoch_step, problem=problem, cfg=cfg, mig=mig,
+                           w2=w2), static_argnames=())
+    stats: List[ExperimentStats] = []
+    t0 = time.perf_counter()
+    success = False
+    evals_at_solution = None
+    epoch = 0
+    for epoch in range(1, max_epochs + 1):
+        rng, k_mig = jax.random.split(rng)
+        up = True if server_up is None else bool(server_up(epoch))
+        islands, dpool = step(islands, dpool, k_mig, available=up)
+
+        if host_pool is not None and up:
+            _host_pool_exchange(host_pool, islands)
+
+        st = jax.tree.map(lambda x: np.asarray(x), collect_stats(islands, epoch))
+        stats.append(st)
+        if verbose:
+            print(f"epoch {epoch}: best={st.best_fitness:.4f} "
+                  f"evals={int(st.total_evaluations)} done={int(st.n_done)} "
+                  f"solved={int(st.experiments_solved)} server={'up' if up else 'DOWN'}")
+        succeeded_now = bool(np.asarray(
+            _success_mask(islands, problem, cfg)).any()) or (
+                w2 and int(st.experiments_solved) > 0)
+        if succeeded_now and not success:
+            success = True
+            evals_at_solution = int(st.total_evaluations)
+        if success and stop_on_success and not w2:
+            break
+
+    return RunResult(
+        islands=islands, pool=dpool, stats=stats, success=success,
+        epochs=epoch, wall_time_s=time.perf_counter() - t0,
+        evaluations=int(np.asarray(islands.evaluations).sum()),
+        evaluations_to_solution=evals_at_solution)
+
+
+def _host_pool_exchange(host_pool, islands: IslandState) -> None:
+    """Mirror device-island bests into the host PoolServer (PUT) and account
+    external immigrants (GET) — best-effort; failures are swallowed exactly
+    like a browser client losing its XHR."""
+    try:
+        bests = np.asarray(islands.best_genome)
+        fits = np.asarray(islands.best_fitness)
+        uuids = np.asarray(islands.uuid)
+        for g, f, u in zip(bests, fits, uuids):
+            host_pool.put(g, float(f), uuid=int(u))
+    except Exception:  # noqa: BLE001 — server down is a tolerated condition
+        pass
+
+
+# ---------------------------------------------------------------------------
+# Fully fused driver (lax.while_loop — benchmark configuration)
+# ---------------------------------------------------------------------------
+def run_fused(problem: Problem,
+              cfg: EAConfig = EAConfig(),
+              mig: MigrationConfig = MigrationConfig(),
+              n_islands: int = 8,
+              max_epochs: int = 100,
+              rng: Optional[Array] = None,
+              w2: bool = False) -> Tuple[IslandState, PoolState, Array]:
+    """Entire experiment in one jitted while_loop. Returns final state and
+    the number of epochs executed. Stops early on global success (non-W²)."""
+    rng = jax.random.key(0) if rng is None else rng
+    k_init, k_loop = jax.random.split(rng)
+    islands0 = island_lib.init_islands(k_init, n_islands, problem, cfg)
+    pool0 = pool_lib.pool_init(mig.pool_capacity, problem.genome)
+
+    def cond(carry):
+        islands, _, _, epoch = carry
+        any_success = _success_mask(islands, problem, cfg).any()
+        run_on = (epoch < max_epochs)
+        if not w2:
+            run_on &= ~any_success
+        return run_on
+
+    def body(carry):
+        islands, pool, key, epoch = carry
+        key, k_mig = jax.random.split(key)
+        islands, pool = epoch_step(islands, pool, k_mig, problem, cfg, mig,
+                                   w2, True)
+        return islands, pool, key, epoch + 1
+
+    @jax.jit
+    def run(islands0, pool0, key):
+        return jax.lax.while_loop(cond, body, (islands0, pool0, key, jnp.int32(0)))
+
+    islands, pool, _, epochs = run(islands0, pool0, k_loop)
+    return islands, pool, epochs

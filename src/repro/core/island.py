@@ -1,0 +1,153 @@
+"""Island = one independent evolutionary algorithm (a NodIO browser client).
+
+An *epoch* is the paper's unit of autonomy: ``n = generations_per_epoch``
+(default 100) generations evolved with zero outside communication, after
+which the island PUTs its best into the pool and GETs a random immigrant.
+
+Islands are padded/masked (see types.py) so a *batch* of heterogeneous
+islands is just ``jax.vmap`` / ``shard_map`` over a leading axis.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ga
+from .problems import Problem
+from .types import Array, EAConfig, GenomeSpec, IslandState
+
+
+def init_island(rng: Array, problem: Problem, cfg: EAConfig,
+                uuid: int | Array = 0, pop_size: Array | None = None) -> IslandState:
+    """Create a fresh island. W²: pop_size ~ U[min_pop, max_pop] if not given."""
+    k_pop, k_size, k_state = jax.random.split(rng, 3)
+    if pop_size is None:
+        pop_size = jax.random.randint(k_size, (), cfg.min_pop, cfg.max_pop + 1)
+    pop_size = jnp.asarray(pop_size, jnp.int32)
+    pop = problem.init_population(k_pop, cfg.max_pop)
+    fitness = ga.mask_fitness(problem.evaluate(problem.consts, pop), pop_size)
+    best_i = jnp.argmax(fitness)
+    return IslandState(
+        pop=pop,
+        fitness=fitness,
+        pop_size=pop_size,
+        rng=k_state,
+        generation=jnp.int32(0),
+        evaluations=pop_size.astype(jnp.int32),
+        best_fitness=fitness[best_i],
+        best_genome=pop[best_i],
+        done=_success(fitness[best_i], problem, cfg),
+        experiments=jnp.int32(0),
+        uuid=jnp.asarray(uuid, jnp.int32),
+    )
+
+
+def init_islands(rng: Array, n_islands: int, problem: Problem,
+                 cfg: EAConfig) -> IslandState:
+    """A batch of islands with heterogeneous population sizes (leading axis)."""
+    keys = jax.random.split(rng, n_islands)
+    uuids = jnp.arange(n_islands, dtype=jnp.int32)
+    return jax.vmap(lambda k, u: init_island(k, problem, cfg, u))(keys, uuids)
+
+
+def _success(best: Array, problem: Problem, cfg: EAConfig) -> Array:
+    if problem.optimum is None:
+        return jnp.asarray(False)
+    return best >= problem.optimum - cfg.success_eps
+
+
+def generation_step(state: IslandState, problem: Problem,
+                    cfg: EAConfig) -> IslandState:
+    """One GA generation. Frozen (done) islands are passed through untouched
+    so a vmapped batch with early finishers charges no phantom evaluations."""
+    rng, k_gen = jax.random.split(state.rng)
+    new_pop = ga.next_generation(k_gen, state.pop, state.fitness,
+                                 state.pop_size, cfg, problem.genome)
+    new_fit = ga.mask_fitness(problem.evaluate(problem.consts, new_pop),
+                              state.pop_size)
+    best_i = jnp.argmax(new_fit)
+    improved = new_fit[best_i] > state.best_fitness
+    best_fitness = jnp.where(improved, new_fit[best_i], state.best_fitness)
+    best_genome = jnp.where(improved, new_pop[best_i], state.best_genome)
+
+    live = ~state.done
+    sel = lambda a, b: jnp.where(live, a, b)  # noqa: E731
+    return state._replace(
+        pop=jnp.where(live, new_pop, state.pop),
+        fitness=sel(new_fit, state.fitness),
+        rng=jnp.where(live, rng, state.rng),
+        generation=sel(state.generation + 1, state.generation),
+        evaluations=sel(state.evaluations + state.pop_size, state.evaluations),
+        best_fitness=sel(best_fitness, state.best_fitness),
+        best_genome=jnp.where(live, best_genome, state.best_genome),
+        done=state.done | (live & _success(best_fitness, problem, cfg)
+                           ) | (live & (state.evaluations >= cfg.max_evaluations)),
+    )
+
+
+def island_epoch(state: IslandState, problem: Problem,
+                 cfg: EAConfig) -> IslandState:
+    """Run ``generations_per_epoch`` generations (the autonomous phase)."""
+    body = lambda _, s: generation_step(s, problem, cfg)  # noqa: E731
+    return jax.lax.fori_loop(0, cfg.generations_per_epoch, body, state)
+
+
+def restart_island(state: IslandState, problem: Problem,
+                   cfg: EAConfig) -> IslandState:
+    """W² restart: fresh population/pop_size, keep uuid & cumulative counters,
+    bump the solved-experiment counter. Applied where ``state.done``."""
+    k_next, k_pop, k_size = jax.random.split(state.rng, 3)
+    pop_size = jax.random.randint(k_size, (), cfg.min_pop, cfg.max_pop + 1)
+    pop = problem.init_population(k_pop, cfg.max_pop)
+    fitness = ga.mask_fitness(problem.evaluate(problem.consts, pop), pop_size)
+    best_i = jnp.argmax(fitness)
+    fresh = IslandState(
+        pop=pop,
+        fitness=fitness,
+        pop_size=pop_size,
+        rng=k_next,
+        generation=jnp.int32(0),
+        evaluations=state.evaluations + pop_size,
+        best_fitness=fitness[best_i],
+        best_genome=pop[best_i],
+        done=_success(fitness[best_i], problem, cfg),
+        experiments=state.experiments + 1,
+        uuid=state.uuid,
+    )
+    return jax.tree.map(
+        lambda new, old: jnp.where(state.done, new, old), fresh, state)
+
+
+def receive_immigrant(state: IslandState, genome: Array, fitness: Array,
+                      replace: str = "worst") -> IslandState:
+    """GET side of migration: insert an immigrant into the population.
+
+    Replaces the worst *valid* lane (or a random valid lane). No-op when the
+    immigrant fitness is -inf (empty pool — server down: island continues)."""
+    valid = jnp.isfinite(fitness)
+    masked = ga.mask_fitness(state.fitness, state.pop_size)
+    if replace == "worst":
+        # worst valid lane = argmin over lanes < pop_size (padded are -inf -> use +inf there)
+        lanes = jnp.arange(state.fitness.shape[0])
+        cand = jnp.where(lanes < state.pop_size, masked, jnp.inf)
+        slot = jnp.argmin(cand)
+    elif replace == "random":
+        rng, k = jax.random.split(state.rng)
+        slot = jax.random.randint(k, (), 0, jnp.maximum(state.pop_size, 1))
+        state = state._replace(rng=rng)
+    else:
+        raise ValueError(f"unknown replace {replace!r}")
+    do = valid & ~state.done
+    new_pop = jnp.where(do, state.pop.at[slot].set(genome.astype(state.pop.dtype)), state.pop)
+    new_fit = jnp.where(do, state.fitness.at[slot].set(fitness), state.fitness)
+    improved = do & (fitness > state.best_fitness)
+    return state._replace(
+        pop=new_pop,
+        fitness=new_fit,
+        best_fitness=jnp.where(improved, fitness, state.best_fitness),
+        best_genome=jnp.where(improved, genome.astype(state.pop.dtype),
+                              state.best_genome),
+    )

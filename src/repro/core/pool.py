@@ -1,0 +1,156 @@
+"""Device-resident chromosome pool + collective migration.
+
+This is the TPU-native analogue of the paper's Node.js REST pool server:
+
+* ``PUT`` — after each autonomous epoch every island contributes its best
+  individual; under SPMD the contributions are ``all_gather``-ed so every
+  shard applies the *same deterministic update* to its replica of the pool
+  (the pool is replicated state, like the single server, but without the
+  single point of failure).
+* ``GET`` — each island draws a uniformly random pool member with its own
+  PRNG key (the paper's "random individual from the server").
+
+An alternative ``ring`` mode trades the all_gather for a
+``collective_permute`` (classic ring-island migration) — cheaper on the
+interconnect; measured against all_gather in §Perf.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .types import Array, GenomeSpec, MigrationConfig, PoolState
+
+NEG_INF = jnp.float32(-jnp.inf)
+
+
+def pool_init(capacity: int, genome: GenomeSpec) -> PoolState:
+    return PoolState(
+        genomes=jnp.zeros((capacity, genome.length), genome.dtype),
+        fitness=jnp.full((capacity,), NEG_INF, jnp.float32),
+        ptr=jnp.int32(0),
+        count=jnp.int32(0),
+    )
+
+
+def pool_reset(pool: PoolState) -> PoolState:
+    return PoolState(
+        genomes=jnp.zeros_like(pool.genomes),
+        fitness=jnp.full_like(pool.fitness, NEG_INF),
+        ptr=jnp.int32(0),
+        count=jnp.int32(0),
+    )
+
+
+def pool_put_batch(pool: PoolState, genomes: Array, fitness: Array,
+                   valid: Optional[Array] = None) -> PoolState:
+    """Insert k entries at the ring pointer. ``valid`` masks out entries
+    (e.g. islands whose PUT was lost); invalid entries do not advance slots.
+
+    Deterministic given inputs — safe to replay identically on every shard.
+    """
+    k = genomes.shape[0]
+    cap = pool.genomes.shape[0]
+    if valid is None:
+        valid = jnp.ones((k,), bool)
+    if k > cap:
+        # More writers than slots (many islands, small pool): keep the best
+        # ``cap`` valid entries — deterministic, replica-consistent.
+        score = jnp.where(valid, fitness, NEG_INF)
+        _, top = jax.lax.top_k(score, cap)
+        genomes, fitness, valid = genomes[top], fitness[top], valid[top]
+        k = cap
+    # Compact valid entries to the front so slots advance densely.
+    order = jnp.argsort(~valid, stable=True)          # valid first
+    genomes, fitness = genomes[order], fitness[order]
+    n_valid = valid.sum().astype(jnp.int32)
+    slots = (pool.ptr + jnp.arange(k, dtype=jnp.int32)) % cap
+    write = jnp.arange(k) < n_valid
+    # Scatter only the valid prefix; invalid rows rewrite their own old value.
+    safe_slots = jnp.where(write, slots, cap)         # cap = drop (out of range)
+    new_genomes = pool.genomes.at[safe_slots].set(
+        genomes.astype(pool.genomes.dtype), mode="drop")
+    new_fitness = pool.fitness.at[safe_slots].set(fitness, mode="drop")
+    return PoolState(
+        genomes=new_genomes,
+        fitness=new_fitness,
+        ptr=(pool.ptr + n_valid) % cap,
+        count=jnp.minimum(pool.count + n_valid, cap),
+    )
+
+
+def pool_get_random(pool: PoolState, rng: Array) -> Tuple[Array, Array]:
+    """Uniform random pool member; (-inf fitness, zeros) when pool is empty
+    (= server down / cold start — the island will treat it as a no-op)."""
+    idx = jax.random.randint(rng, (), 0, jnp.maximum(pool.count, 1))
+    empty = pool.count == 0
+    fit = jnp.where(empty, NEG_INF, pool.fitness[idx])
+    return pool.genomes[idx], fit
+
+
+def pool_best(pool: PoolState) -> Tuple[Array, Array]:
+    i = jnp.argmax(pool.fitness)
+    return pool.genomes[i], pool.fitness[i]
+
+
+# ---------------------------------------------------------------------------
+# Migration (batched islands, single shard)
+# ---------------------------------------------------------------------------
+def migrate_batch(pool: PoolState, bests_genome: Array, bests_fitness: Array,
+                  rng: Array, available: Array | bool = True,
+                  ) -> Tuple[PoolState, Array, Array]:
+    """PUT all island bests, then GET one random immigrant per island.
+
+    available=False emulates a dead server: pool unchanged, immigrants are
+    marked -inf so islands continue standalone (the paper's fault-tolerance
+    property).
+    """
+    n = bests_genome.shape[0]
+    available = jnp.asarray(available)
+    new_pool = pool_put_batch(pool, bests_genome, bests_fitness)
+    pool = jax.tree.map(lambda a, b: jnp.where(available, a, b), new_pool, pool)
+    keys = jax.random.split(rng, n)
+    genomes, fits = jax.vmap(lambda k: pool_get_random(pool, k))(keys)
+    fits = jnp.where(available, fits, NEG_INF)
+    return pool, genomes, fits
+
+
+# ---------------------------------------------------------------------------
+# Migration (SPMD, inside shard_map over an island axis)
+# ---------------------------------------------------------------------------
+def migrate_sharded(pool: PoolState, bests_genome: Array, bests_fitness: Array,
+                    rng: Array, axis: str, cfg: MigrationConfig,
+                    available: Array | bool = True,
+                    ) -> Tuple[PoolState, Array, Array]:
+    """Collective migration across the ``axis`` mesh dimension.
+
+    all_gather mode: gather every shard's bests -> identical pool update on
+    each shard -> local random GETs. ring mode: each shard's bests go to the
+    next shard (collective_permute); the pool is bypassed.
+    Local arrays carry this shard's islands: bests_* is (n_local, L).
+    """
+    if cfg.collective == "ring":
+        n_shards = jax.lax.axis_size(axis)
+        idx = jax.lax.axis_index(axis)
+        perm = [(i, (i + 1) % n_shards) for i in range(n_shards)]
+        imm_g = jax.lax.ppermute(bests_genome, axis, perm)
+        imm_f = jax.lax.ppermute(bests_fitness, axis, perm)
+        imm_f = jnp.where(jnp.asarray(available), imm_f, NEG_INF)
+        return pool, imm_g, imm_f
+
+    # all_gather mode — the faithful PUT/GET pool semantics.
+    all_g = jax.lax.all_gather(bests_genome, axis, tiled=True)    # (n_total, L)
+    all_f = jax.lax.all_gather(bests_fitness, axis, tiled=True)   # (n_total,)
+    # Same data + same deterministic update on every shard => replicas agree.
+    available = jnp.asarray(available)
+    new_pool = pool_put_batch(pool, all_g, all_f)
+    pool = jax.tree.map(lambda a, b: jnp.where(available, a, b), new_pool, pool)
+    n_local = bests_genome.shape[0]
+    # Decorrelate shards: fold the shard index into the key.
+    rng = jax.random.fold_in(rng, jax.lax.axis_index(axis))
+    keys = jax.random.split(rng, n_local)
+    genomes, fits = jax.vmap(lambda k: pool_get_random(pool, k))(keys)
+    fits = jnp.where(available, fits, NEG_INF)
+    return pool, genomes, fits

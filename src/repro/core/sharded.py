@@ -1,0 +1,105 @@
+"""SPMD NodIO: islands sharded across a mesh axis via shard_map.
+
+Maps the volunteer fleet onto hardware: every device (or device row) hosts a
+contiguous slab of islands; migration is the only cross-device communication
+(all_gather'd pool update or ring permute — see core.pool.migrate_sharded),
+mirroring the paper's server round-trip every ``generations_per_epoch``.
+
+The entry point :func:`run_sharded` works on any 1-D mesh ("islands" axis).
+On the production mesh the same step runs with the island axis mapped to
+("pod", "data") and fitness evaluation sharded over "model" (see
+launch/evolve.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from . import island as island_lib
+from . import pool as pool_lib
+from .problems import Problem
+from .types import Array, EAConfig, IslandState, MigrationConfig, PoolState
+
+
+def _epoch_shard(islands: IslandState, pool: PoolState, rng: Array,
+                 problem: Problem, cfg: EAConfig, mig: MigrationConfig,
+                 axis: str, w2: bool, available) -> Tuple[IslandState, PoolState]:
+    """Body executed per shard: local islands evolve, then collective
+    migration. ``rng`` is the *replicated* epoch key; shard decorrelation
+    happens inside migrate_sharded via fold_in(axis_index)."""
+    islands = jax.vmap(lambda s: island_lib.island_epoch(s, problem, cfg))(islands)
+    pool, imm_g, imm_f = pool_lib.migrate_sharded(
+        pool, islands.best_genome, islands.best_fitness, rng, axis, mig,
+        available=available)
+    islands = jax.vmap(
+        partial(island_lib.receive_immigrant, replace=mig.replace)
+    )(islands, imm_g, imm_f)
+    if w2:
+        succeeded = islands.best_fitness >= (
+            jnp.inf if problem.optimum is None
+            else problem.optimum - cfg.success_eps)
+        restarted = jax.vmap(
+            lambda s: island_lib.restart_island(s, problem, cfg))(islands)
+        islands = jax.tree.map(
+            lambda r, o: jnp.where(
+                succeeded.reshape(succeeded.shape + (1,) * (r.ndim - 1)), r, o),
+            restarted, islands)
+    return islands, pool
+
+
+def make_sharded_epoch(mesh: Mesh, axis: str, problem: Problem,
+                       cfg: EAConfig, mig: MigrationConfig, w2: bool = False):
+    """Build the jitted SPMD epoch step for ``mesh`` with islands sharded
+    over ``axis``. Pool state is replicated; island batch is sharded."""
+    island_spec = jax.tree.map(lambda _: P(axis), IslandState(
+        *[None] * len(IslandState._fields)))
+    pool_spec = jax.tree.map(lambda _: P(), PoolState(*[None] * 4))
+
+    fn = shard_map(
+        partial(_epoch_shard, problem=problem, cfg=cfg, mig=mig, axis=axis,
+                w2=w2),
+        mesh=mesh,
+        in_specs=(island_spec, pool_spec, P(), None),
+        out_specs=(island_spec, pool_spec),
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+def run_sharded(mesh: Mesh, problem: Problem,
+                cfg: EAConfig = EAConfig(),
+                mig: MigrationConfig = MigrationConfig(),
+                islands_per_shard: int = 4,
+                max_epochs: int = 50,
+                rng: Optional[Array] = None,
+                w2: bool = False,
+                axis: str = "islands") -> Tuple[IslandState, PoolState, int]:
+    """Run a sharded experiment until success or max_epochs (host loop)."""
+    rng = jax.random.key(0) if rng is None else rng
+    n_shards = mesh.shape[axis]
+    n_islands = n_shards * islands_per_shard
+    k_init, rng = jax.random.split(rng)
+    islands = island_lib.init_islands(k_init, n_islands, problem, cfg)
+    pool = pool_lib.pool_init(mig.pool_capacity, problem.genome)
+
+    ish = jax.tree.map(
+        lambda x: jax.device_put(x, NamedSharding(mesh, P(axis, *([None] * (x.ndim - 1))))),
+        islands)
+    psh = jax.tree.map(
+        lambda x: jax.device_put(x, NamedSharding(mesh, P())), pool)
+
+    step = make_sharded_epoch(mesh, axis, problem, cfg, mig, w2)
+    epoch = 0
+    for epoch in range(1, max_epochs + 1):
+        rng, k = jax.random.split(rng)
+        ish, psh = step(ish, psh, k, True)
+        if problem.optimum is not None and not w2:
+            best = float(jax.device_get(ish.best_fitness.max()))
+            if best >= problem.optimum - cfg.success_eps:
+                break
+    return ish, psh, epoch

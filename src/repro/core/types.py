@@ -1,0 +1,139 @@
+"""Shared pytree/state types for the NodIO evolutionary runtime.
+
+Conventions
+-----------
+* All *state* containers are ``NamedTuple``s (automatically pytrees, jit/vmap
+  friendly). All *configuration* containers are frozen dataclasses (hashable,
+  usable as jit static arguments).
+* Fitness is always MAXIMIZED. Minimization problems negate internally.
+* Populations are padded to a static ``max_pop``; the *effective* population
+  size of an island is carried in ``IslandState.pop_size`` (NodIO-W²
+  heterogeneity: sizes are drawn per island from [128, 256] and differ between
+  islands while the SPMD lanes stay static).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Genomes
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class GenomeSpec:
+    """Static description of a chromosome.
+
+    kind: 'binary' (int8 0/1 vector) or 'float' (float32 vector in bounds).
+    length: number of genes.
+    low/high: bounds for float genomes (ignored for binary).
+    """
+
+    kind: str
+    length: int
+    low: float = -5.0
+    high: float = 5.0
+
+    def __post_init__(self):
+        if self.kind not in ("binary", "float"):
+            raise ValueError(f"unknown genome kind {self.kind!r}")
+
+    @property
+    def dtype(self):
+        return jnp.int8 if self.kind == "binary" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# EA configuration (static — hashable, goes into jit as a constant)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class EAConfig:
+    """Configuration of the per-island 'Classic' NodEO-style GA."""
+
+    max_pop: int = 256              # static lane count (padded population)
+    min_pop: int = 128              # W²: per-island pop ~ U[min_pop, max_pop]
+    generations_per_epoch: int = 100  # the paper's migration interval n
+    tournament_k: int = 2
+    selection: str = "tournament"    # 'tournament' | 'roulette'
+    crossover: str = "two_point"     # 'two_point' | 'uniform' | 'blend'
+    crossover_rate: float = 0.9
+    mutation_rate: Optional[float] = None  # None -> 1/L per gene
+    mutation_sigma: float = 0.3      # gaussian sigma for float genomes
+    elite: int = 2                   # elitism count
+    max_evaluations: int = 5_000_000  # paper's evaluation budget
+    success_eps: float = 1e-8
+
+    def mut_rate(self, genome: GenomeSpec) -> float:
+        return self.mutation_rate if self.mutation_rate is not None else 1.0 / genome.length
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationConfig:
+    """Pool/migration policy — the paper's PUT(best)/GET(random) cycle."""
+
+    pool_capacity: int = 64          # chromosomes retained server-side
+    get_random: bool = True          # GET a uniformly random pool member
+    replace: str = "worst"           # immigrant replaces 'worst' | 'random'
+    collective: str = "all_gather"   # 'all_gather' | 'ring' (device pool impl)
+
+
+# ---------------------------------------------------------------------------
+# Dynamic state pytrees
+# ---------------------------------------------------------------------------
+class IslandState(NamedTuple):
+    """State of one island (or a batch of islands when leading axis added).
+
+    pop:          (max_pop, L) genome array
+    fitness:      (max_pop,)   float32, -inf on padded lanes
+    pop_size:     ()           int32, effective population size
+    rng:          ()           PRNG key
+    generation:   ()           int32, generations completed (this experiment)
+    evaluations:  ()           int32, fitness evaluations charged (this island)
+    best_fitness: ()           float32, best ever seen (this experiment)
+    best_genome:  (L,)         genome of the best ever
+    done:         ()           bool, island found the optimum
+    experiments:  ()           int32, W² restart counter (solved experiments)
+    uuid:         ()           int32, island identity (for host-pool requests)
+    """
+
+    pop: Array
+    fitness: Array
+    pop_size: Array
+    rng: Array
+    generation: Array
+    evaluations: Array
+    best_fitness: Array
+    best_genome: Array
+    done: Array
+    experiments: Array
+    uuid: Array
+
+
+class PoolState(NamedTuple):
+    """Device-resident chromosome pool (the REST server's array analogue).
+
+    A fixed-capacity ring buffer. ``count`` saturates at capacity; ``ptr`` is
+    the next write slot. Replicated (or per-shard identical) under SPMD.
+    """
+
+    genomes: Array   # (capacity, L)
+    fitness: Array   # (capacity,) -inf for empty slots
+    ptr: Array       # () int32 next write position
+    count: Array     # () int32 number of valid entries (<= capacity)
+
+
+class ExperimentStats(NamedTuple):
+    """Per-epoch record emitted by the evolution driver."""
+
+    epoch: Array
+    best_fitness: Array       # global best across islands
+    mean_best: Array          # mean of island bests
+    total_evaluations: Array
+    n_done: Array             # islands that found the optimum
+    experiments_solved: Array  # cumulative W² solved-experiment count

@@ -1,0 +1,4 @@
+from .synthetic import SyntheticLM, make_batch_specs
+from .pipeline import ShardedLoader
+
+__all__ = ["SyntheticLM", "ShardedLoader", "make_batch_specs"]

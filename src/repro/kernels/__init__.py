@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel package ships three modules:
+    <name>.py  — the pl.pallas_call kernel with explicit BlockSpec tiling
+    ops.py     — the jit'd public wrapper (auto interpret-mode off-TPU)
+    ref.py     — the pure-jnp oracle the kernel is tested against
+
+Kernels: trap (bitstring fitness), rastrigin (CEC2010-F15 fused fitness),
+rwkv6 (chunked WKV linear recurrence), flash_attention (causal online-
+softmax attention).
+"""
+
+
+def on_tpu() -> bool:
+    import jax
+
+    return jax.default_backend() == "tpu"

@@ -1,0 +1,100 @@
+"""Pallas kernel: causal flash attention (online softmax, GQA-aware).
+
+The 32k-prefill cells are attention-FLOP dominated; materializing the
+(S×S) score matrix at 32k is 4 GiB/head — flash tiling keeps the working
+set at (BQ×hd + 2·BK×hd + BQ×BK) in VMEM.
+
+Grid: (B, H, Sq/BQ, Sk/BK) with the KV-block dimension innermost
+(sequential) so the online-softmax accumulators (m, l, acc) can live in
+VMEM scratch across KV steps. GQA is handled in the *index map*: the KV
+block for q-head h is block h//G — no materialized head broadcast.
+Fully-masked KV blocks (block start beyond the causal frontier) are skipped
+via pl.when, giving the ~2x triangular saving.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BQ = 128
+BK = 128
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+                  scale: float, causal: bool, bq: int, bk: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q_start = iq * bq
+    k_start = ik * bk
+    # last KV block this q block attends to (causal) / last block overall
+    last_ik = jnp.minimum((q_start + bq - 1) // bk, nk - 1) if causal \
+        else nk - 1
+
+    run = (k_start <= q_start + bq - 1) if causal else True
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)        # (BQ, hd)
+        k = k_ref[0, 0].astype(jnp.float32)        # (BK, hd)
+        v = v_ref[0, 0].astype(jnp.float32)        # (BK, hd)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG)
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_s[...] = l_s[...] * corr + p.sum(axis=1)
+        acc_s[...] = acc_s[...] * corr[:, None] \
+            + jnp.dot(p, v, preferred_element_type=jnp.float32)
+        m_s[...] = m_new
+
+    @pl.when(ik == last_ik)
+    def _finalize():
+        o_ref[0, 0] = (acc_s[...]
+                       / jnp.maximum(l_s[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, scale: float, causal: bool,
+                           bq: int = BQ, bk: int = BK,
+                           interpret: bool = False):
+    """q: (B,H,Sq,hd), k/v: (B,Kv,Sk,hd), Sq%bq==0, Sk%bk==0."""
+    B, H, Sq, hd = q.shape
+    Kv, Sk = k.shape[1], k.shape[2]
+    G = H // Kv
+    grid = (B, H, Sq // bq, Sk // bk)
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               bq=bq, bk=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),        # m
+            pltpu.VMEM((bq,), jnp.float32),        # l
+            pltpu.VMEM((bq, hd), jnp.float32),     # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the WKV6 recurrence (sequential scan over time).
+
+    y_t = r_t · (S_{t-1} + diag(u) k_t v_tᵀ)
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+
+r,k,v,w: (B,S,H,hd); u: (H,hd); S: (B,H,hd,hd) f32.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+        u: jax.Array, state: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    def step(S_, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S_ + u[None, :, :, None] * kv)
+        S_ = w_t[..., :, None] * S_ + kv
+        return S_, y
+
+    seq = jax.tree.map(
+        lambda a: jnp.moveaxis(a.astype(jnp.float32), 1, 0), (r, k, v, w))
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32), seq)
+    return jnp.moveaxis(ys, 0, 1), state

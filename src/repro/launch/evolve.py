@@ -1,0 +1,134 @@
+"""Evolution drivers — the paper's experiments at every scale.
+
+Two modes:
+
+* ``ea``  — the NodIO experiment proper: N islands x pool, trap or F15,
+  single host or shard_map-sharded over all local devices.
+* ``pbt`` — pods-as-islands pool-based training of an assigned LM arch
+  (core/pbt.py): each member trains with chromosome hyperparameters and
+  migrates through the PoolServer every epoch.
+
+CPU examples:
+  PYTHONPATH=src python -m repro.launch.evolve ea --problem trap --islands 8
+  PYTHONPATH=src python -m repro.launch.evolve pbt --arch minicpm-2b \
+      --members 4 --epochs 5
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.core import (EAConfig, MigrationConfig, PoolServer, make_problem,
+                        run_experiment)
+from repro.core import pbt as pbt_lib
+from repro.core.sharded import run_sharded
+from repro.data import SyntheticLM
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import TrainState, init_train_state
+from repro.models import build_model
+from repro.optim import adamw_update
+
+
+def run_ea(problem_name: str = "trap", islands: int = 8, epochs: int = 50,
+           w2: bool = False, sharded: bool = False, seed: int = 0,
+           verbose: bool = True, **problem_kwargs):
+    problem = make_problem(problem_name, **problem_kwargs)
+    cfg = EAConfig()
+    mig = MigrationConfig()
+    t0 = time.time()
+    if sharded:
+        mesh = make_host_mesh()
+        n_shards = mesh.shape["islands"]
+        per = max(1, islands // n_shards)
+        isl, pool, ep = run_sharded(mesh, problem, cfg, mig,
+                                    islands_per_shard=per,
+                                    max_epochs=epochs, w2=w2,
+                                    rng=jax.random.key(seed))
+        best = float(jax.device_get(isl.best_fitness.max()))
+        if verbose:
+            print(f"[sharded x{n_shards}] best={best} epochs={ep} "
+                  f"({time.time()-t0:.1f}s)")
+        return isl, pool
+    res = run_experiment(problem, cfg, mig, n_islands=islands,
+                         max_epochs=epochs, w2=w2,
+                         rng=jax.random.key(seed), verbose=verbose)
+    if verbose:
+        print(f"success={res.success} evals_to_solution="
+              f"{res.evaluations_to_solution} wall={res.wall_time_s:.1f}s")
+    return res
+
+
+def run_pbt(arch: str = "minicpm-2b", members: int = 4, epochs: int = 5,
+            steps_per_epoch: int = 20, batch: int = 8, seq: int = 64,
+            seed: int = 0, verbose: bool = True):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=seq,
+                       global_batch=batch, seed=seed)
+
+    @jax.jit
+    def step_fn(state, batch_, lr, wd):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(state.params, batch_)
+        params, opt, om = adamw_update(grads, state.opt, state.params,
+                                       lr=lr, weight_decay=wd)
+        return TrainState(params, opt), {**metrics, **om}
+
+    @jax.jit
+    def eval_fn(state, batch_):
+        return model.loss(state.params, batch_)[0]
+
+    ctrl = pbt_lib.PBTController(
+        step_fn=step_fn, eval_fn=eval_fn,
+        init_state_fn=lambda uid: init_train_state(
+            model, jax.random.key(seed + uid)),
+        pool=PoolServer(capacity=64, seed=seed), seed=seed)
+
+    def batches(uid, epoch):
+        # each member trains on its own slice of the step space (islands
+        # see different data — the volunteer heterogeneity); offsetting by
+        # uid avoids any divisibility constraint between batch and members
+        return (data.batch_for_step(
+            uid * 1_000_000 + epoch * steps_per_epoch + s, 0, 1)
+                for s in range(steps_per_epoch))
+
+    def eval_batch(uid, epoch):
+        return data.batch_for_step(10_000 + epoch, 0, 1)
+
+    hist = ctrl.run(members, epochs, batches, eval_batch, verbose=verbose)
+    best = ctrl.best_member()
+    if verbose:
+        print(f"best member {best.uuid}: val={-best.fitness:.4f} "
+              f"lr={best.hypers['lr']:.2e} exploits={best.exploits}")
+    return ctrl
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    sub = ap.add_subparsers(dest="mode", required=True)
+    ea = sub.add_parser("ea")
+    ea.add_argument("--problem", default="trap")
+    ea.add_argument("--islands", type=int, default=8)
+    ea.add_argument("--epochs", type=int, default=50)
+    ea.add_argument("--w2", action="store_true")
+    ea.add_argument("--sharded", action="store_true")
+    pbt = sub.add_parser("pbt")
+    pbt.add_argument("--arch", choices=ARCHS, default="minicpm-2b")
+    pbt.add_argument("--members", type=int, default=4)
+    pbt.add_argument("--epochs", type=int, default=5)
+    pbt.add_argument("--steps-per-epoch", type=int, default=20)
+    args = ap.parse_args(argv)
+    if args.mode == "ea":
+        run_ea(args.problem, args.islands, args.epochs, args.w2,
+               args.sharded)
+    else:
+        run_pbt(args.arch, args.members, args.epochs, args.steps_per_epoch)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins per (arch x shape).
+
+Shapes (LM family — seq_len x global_batch):
+    train_4k      4,096 x 256   training step
+    prefill_32k  32,768 x 32    inference prefill
+    decode_32k   32,768 x 128   one decode token against a 32k KV cache
+    long_500k   524,288 x 1     long-context decode (sub-quadratic archs only)
+
+Skip rules (per the assignment):
+  * long_500k runs only for SSM/hybrid archs (rwkv6-3b, hymba-1.5b) — full-
+    attention archs skip it (DESIGN.md §Arch-applicability).
+  * No encoder-only archs were assigned, so decode shapes apply everywhere.
+
+Enc-dec (seamless) interpretation: the context length applies to the
+*encoder source* (precomputed frame embeddings — stub frontend); decoder
+sees a 128-token prompt at prefill and a 4,096-entry cross cache at decode.
+VLM: vision frontend stub supplies (B, 1024, d_model) patch embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model, ModelConfig
+from repro.models.common import shape_maker, axes_maker
+
+SHAPES: Dict[str, Dict[str, Any]] = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+ENCDEC_DECODER_PROMPT = 128
+ENCDEC_DECODE_CROSS = 4096
+
+
+def cell_supported(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention arch: 512k decode skipped per "
+                       "assignment (KV cache unbounded / quadratic prefill)")
+    return True, ""
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, model: Model, shape: str,
+                ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Returns (batch_specs, batch_axes) — ShapeDtypeStructs and logical
+    axes trees for every input of the step function for this cell."""
+    info = SHAPES[shape]
+    S, B = info["seq"], info["batch"]
+    kind = info["kind"]
+    d = cfg.d_model
+    adt = cfg.activation_dtype
+    mk_shape = shape_maker(adt)
+    mk_axes = axes_maker()
+
+    specs: Dict[str, Any] = {}
+    axes: Dict[str, Any] = {}
+
+    if kind in ("train", "prefill"):
+        tok_len = S
+        if kind == "prefill" and cfg.n_encoder_layers:
+            tok_len = ENCDEC_DECODER_PROMPT       # 32k applies to the source
+        specs["tokens"] = _i32((B, tok_len))
+        axes["tokens"] = ("batch", None)
+        if kind == "train":
+            specs["labels"] = _i32((B, tok_len))
+            axes["labels"] = ("batch", None)
+        if cfg.n_encoder_layers:
+            specs["src_embed"] = jax.ShapeDtypeStruct((B, S, d), adt)
+            axes["src_embed"] = ("batch", None, "embed")
+        if cfg.family == "vlm":
+            specs["vision_embed"] = jax.ShapeDtypeStruct(
+                (B, cfg.vision_seq, d), adt)
+            axes["vision_embed"] = ("batch", None, "embed")
+        return specs, axes
+
+    # ---- decode ----
+    total_ctx = S + cfg.n_meta_tokens
+    specs["token"] = _i32((B, 1))
+    axes["token"] = ("batch", None)
+    specs["index"] = _i32(())
+    axes["index"] = ()
+    specs["caches"] = model.cache_specs(mk_shape, B, total_ctx)
+    axes["caches"] = model.cache_specs(mk_axes, B, total_ctx)
+    src_len = (ENCDEC_DECODE_CROSS if cfg.n_encoder_layers
+               else cfg.vision_seq if cfg.family == "vlm" else None)
+    if src_len is not None:
+        xkv_shape = model.cross_kv_specs(mk_shape, B, src_len)
+        xkv_axes = model.cross_kv_specs(mk_axes, B, src_len)
+        if xkv_shape is not None:
+            specs["cross_kvs"] = xkv_shape
+            axes["cross_kvs"] = xkv_axes
+    return specs, axes
+
+
+def cells(archs, shapes=None):
+    """Iterate all assigned (arch, shape) cells with their skip status."""
+    from repro.configs import get_config
+
+    shapes = shapes or list(SHAPES)
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in shapes:
+            ok, why = cell_supported(cfg, shape)
+            yield arch, shape, ok, why

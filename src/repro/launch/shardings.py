@@ -1,0 +1,189 @@
+"""Logical-axis -> mesh PartitionSpec rules.
+
+Model code annotates every tensor dimension with a *logical* name (see
+models/common.py). This module turns (axes-tree, shape-tree) into
+NamedSharding trees for a given mesh, with divisibility-checked assignment
+(a dim that doesn't divide evenly is replicated rather than padded — keeps
+memory_analysis exact and avoids GSPMD pad surprises).
+
+Train rules: tensor-parallel params over 'model', batch over ('pod','data'),
+optimizer state additionally ZeRO-1-sharded over 'data'.
+Serve rules: params fully sharded over ('data','model') too (weight
+memory dominates serving; the per-layer all-gather is the classic
+weight-gathered serving trade), KV caches over batch x (kv-heads | seq).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+from .mesh import axis_size, dp_axes
+
+Axis = Optional[str]
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    return dim % axis_size(mesh, axes) == 0 and dim > 0
+
+
+def fsdp_train(cfg: ModelConfig) -> bool:
+    """Large archs additionally shard weights over 'data' during training
+    (ZeRO-3 / FSDP): tensor-parallel-16 alone leaves >8 GiB of bf16 params
+    per device for ≥30B models — measured OOM on dbrx/llama-vision/qwen3.
+    The per-layer weight all-gather this costs is recorded in the roofline
+    collective term."""
+    total, _ = cfg.param_count()
+    return total >= 25e9
+
+
+def _rules(cfg: ModelConfig, mesh: Mesh, mode: str) -> Dict[Any, Any]:
+    dp = dp_axes(mesh)
+    # caches shard the *head-count* dim when it divides the model axis;
+    # otherwise the cache sequence dim takes the model axis (MQA/GQA with
+    # few kv heads — granite kv=1, llama-vision kv=8, ...)
+    kv_shardable = cfg.n_kv_heads % mesh.shape["model"] == 0
+    has_data = "data" in mesh.axis_names
+
+    if mode == "train_dp":
+        # pure data parallelism + ZeRO-3: batch over EVERY mesh axis,
+        # weights fully sharded over ('data','model') and re-gathered per
+        # layer. No activation collectives at all — the NodIO philosophy
+        # (maximal independence, communicate only parameters) applied to
+        # sharding. Wins when tokens/step >> total devices (train_4k).
+        full = dp + ("model",)
+        wide = ("data", "model") if has_data else ("model",)
+        return {
+            "embed": wide, "vocab": wide, "heads": wide, "kv": wide,
+            "ff": wide, "experts": ("model",), "layers": None,
+            "batch": full,
+            "kv_head": None, "cache_seq": None, "heads_only": None,
+            None: None,
+        }
+
+    wide_serve = mode == "serve" and has_data
+    wide_train = mode == "train" and has_data and fsdp_train(cfg)
+    wide = ("data", "model") if (wide_serve or wide_train) else ("model",)
+    return {
+        "embed": ("data",) if (wide_serve or wide_train) else None,
+        "vocab": ("model",),
+        "heads": wide,
+        "kv": wide if mode == "serve" else ("model",),
+        "ff": wide,
+        "experts": ("model",),
+        "layers": None,
+        "batch": dp,
+        "kv_head": ("model",) if kv_shardable else None,
+        # cache seq dim picks up 'model' exactly when kv-heads can't
+        "cache_seq": None if kv_shardable else ("model",),
+        "heads_only": ("model",),
+        None: None,
+    }
+
+
+def pspec(axes: Tuple[Axis, ...], shape: Tuple[int, ...], cfg: ModelConfig,
+          mesh: Mesh, mode: str = "train") -> P:
+    rules = _rules(cfg, mesh, mode)
+    entries = []
+    used: set = set()
+    for name, dim in zip(axes, shape):
+        target = rules.get(name)
+        if target is None:
+            entries.append(None)
+            continue
+        if isinstance(target, str):
+            target = (target,)
+        # a mesh axis can shard at most one dim — earlier dims claim first
+        target = tuple(a for a in target if a not in used)
+        if target and _fits(dim, mesh, target):
+            entries.append(target if len(target) > 1 else target[0])
+            used.update(target)
+        elif len(target) > 1 and _fits(dim, mesh, target[-1:]):
+            entries.append(target[-1])
+            used.add(target[-1])
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def tree_pspecs(axes_tree: Any, shape_tree: Any, cfg: ModelConfig,
+                mesh: Mesh, mode: str = "train") -> Any:
+    """Map matching (axes, abstract-shape) trees to PartitionSpecs."""
+    return jax.tree.map(
+        lambda ax, sh: pspec(tuple(ax), tuple(sh.shape), cfg, mesh, mode),
+        axes_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))
+
+
+def tree_shardings(axes_tree: Any, shape_tree: Any, cfg: ModelConfig,
+                   mesh: Mesh, mode: str = "train") -> Any:
+    return jax.tree.map(lambda p: NamedSharding(mesh, p),
+                        tree_pspecs(axes_tree, shape_tree, cfg, mesh, mode))
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1: optimizer state sharding
+# ---------------------------------------------------------------------------
+def zero1_pspec(param_spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Extend a param's spec with 'data' on the largest replicated dim that
+    divides — classic optimizer-state sharding (ZeRO stage 1)."""
+    if "data" not in mesh.axis_names:
+        return param_spec
+    entries = list(param_spec) + [None] * (len(shape) - len(param_spec))
+    # FSDP-sharded params already consume 'data' — nothing left to ZeRO
+    flat = [a for e in entries if e is not None
+            for a in (e if isinstance(e, tuple) else (e,))]
+    if "data" in flat:
+        return param_spec
+    best, best_dim = -1, 0
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % mesh.shape["data"] == 0 and dim > best_dim:
+            best, best_dim = i, dim
+    if best >= 0:
+        entries[best] = "data"
+    return P(*entries)
+
+
+def opt_state_pspecs(param_pspecs: Any, param_shapes: Any, mesh: Mesh,
+                     zero1: bool = True) -> Any:
+    """PartitionSpecs for AdamWState given the params' specs/shapes."""
+    from repro.optim import AdamWState
+
+    def one(ps, sh):
+        return zero1_pspec(ps, tuple(sh.shape), mesh) if zero1 else ps
+
+    moment_specs = jax.tree.map(one, param_pspecs, param_shapes,
+                                is_leaf=lambda x: isinstance(x, P))
+    has_master = any(s.dtype != jnp.float32
+                     for s in jax.tree.leaves(param_shapes))
+    return AdamWState(
+        m=moment_specs, v=moment_specs,
+        master=moment_specs if has_master else None,
+        step=P())
+
+
+def batch_pspecs(batch_specs: Dict[str, jax.ShapeDtypeStruct],
+                 mesh: Mesh, mode: str = "train") -> Dict[str, P]:
+    """Inputs: batch dim over the data-parallel axes when divisible
+    (all mesh axes for pure-DP mode), else replicate."""
+    dp = dp_axes(mesh) + (("model",) if mode == "train_dp" else ())
+    out = {}
+    for k, v in batch_specs.items():
+        if v.ndim == 0:
+            out[k] = P()
+            continue
+        b = v.shape[0]
+        lead = None
+        for cand in (dp, dp_axes(mesh), ("data",)):
+            if all(a in mesh.axis_names for a in cand) \
+                    and b % axis_size(mesh, cand) == 0:
+                lead = cand
+                break
+        if isinstance(lead, tuple) and len(lead) == 1:
+            lead = lead[0]
+        out[k] = P(lead, *([None] * (v.ndim - 1)))
+    return out

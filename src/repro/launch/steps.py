@@ -1,0 +1,107 @@
+"""Jittable step functions: train (with grad accumulation + optional
+compressed cross-pod sync), prefill, decode."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+from repro.optim import AdamWState, adamw_init, adamw_update
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def init_train_state(model: Model, rng: jax.Array) -> TrainState:
+    params = model.init(rng)
+    return TrainState(params=params, opt=adamw_init(params))
+
+
+def abstract_train_state(model: Model) -> TrainState:
+    params = model.abstract_params()
+    opt = jax.eval_shape(adamw_init, params)
+    return TrainState(params=params, opt=opt)
+
+
+def make_train_step(model: Model, *,
+                    schedule: Callable[[jax.Array], jax.Array],
+                    accum_steps: int = 1,
+                    weight_decay: float = 0.1,
+                    max_grad_norm: float = 1.0,
+                    use_flash: bool = False,
+                    use_rwkv_kernel: bool = False,
+                    remat_mode: str = "layer",
+                    unroll: int = 1,
+                    ) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    """Build train_step(state, batch) -> (state, metrics).
+
+    accum_steps > 1 splits the global batch into sequential microbatches
+    (same math, 1/k live activations). ``unroll`` is forwarded to the layer
+    scan — used by the roofline harness's two-point cost extrapolation.
+    """
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, use_flash=use_flash,
+                          use_rwkv_kernel=use_rwkv_kernel,
+                          remat_mode=remat_mode, unroll=unroll)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return grads, metrics
+
+    def step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        if accum_steps == 1:
+            grads, metrics = grads_of(state.params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % accum_steps == 0, (b, accum_steps)
+                return x.reshape(accum_steps, b // accum_steps, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                g, m = grads_of(state.params, mb)
+                acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32) / accum_steps,
+                    acc, g)
+                return acc, m
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            grads, ms = jax.lax.scan(body, zero, micro)
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+
+        lr = schedule(state.opt.step)
+        params, opt, om = adamw_update(
+            grads, state.opt, state.params, lr=lr,
+            weight_decay=weight_decay, max_grad_norm=max_grad_norm)
+        return TrainState(params, opt), {**metrics, **om}
+
+    return step
+
+
+def make_prefill_step(model: Model, *, max_seq: Optional[int] = None,
+                      use_flash: bool = False,
+                      use_rwkv_kernel: bool = False, unroll: int = 1):
+    def prefill(params, batch):
+        return model.prefill(params, batch, use_flash=use_flash,
+                             use_rwkv_kernel=use_rwkv_kernel,
+                             max_seq=max_seq, unroll=unroll)
+
+    return prefill
+
+
+def make_decode_step(model: Model, *, unroll: int = 1):
+    def decode(params, batch):
+        return model.decode(params, batch["token"], batch["index"],
+                            batch["caches"], batch.get("cross_kvs"),
+                            unroll=unroll)
+
+    return decode

@@ -1,0 +1,5 @@
+"""repro.models — the LM substrate: 10 architecture families, one stack."""
+from .common import ModelConfig
+from .model import Model, build_model
+
+__all__ = ["ModelConfig", "Model", "build_model"]

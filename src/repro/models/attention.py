@@ -1,0 +1,329 @@
+"""Attention: GQA/MQA/MHA, qk-norm, sliding windows, cross-attention, KV cache.
+
+One implementation covers every assigned arch's attention flavour:
+
+* GQA grouping (yi kv=4, qwen3/dbrx/llama-vision kv=8, granite MQA kv=1,
+  full MHA for seamless/olmoe/minicpm) via a (B,S,Kv,G,hd) reshape.
+* qk-RMSNorm per head (qwen3).
+* Sliding-window masks with always-visible meta tokens (hymba) — window and
+  meta count are *static* per layer-segment so masks lower to cheap iotas.
+* Cross-attention over precomputed source KV (seamless decoder, llama-vision
+  gated cross layers).
+* Ring-buffer KV cache for decode: slot = position % cache_window, stored
+  positions make the mask exact; full attention is the special case
+  cache_window == max_seq.
+
+The causal full-sequence path can route to the Pallas flash-attention kernel
+(TPU target) with ``use_flash=True``; default is the pure-jnp path (oracle,
+and what the CPU dry-run lowers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Array, Maker, ModelConfig, constrain, rmsnorm_1d
+from .rope import apply_rope, rope_angles
+
+NEG = jnp.float32(-1e30)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+def params(cfg: ModelConfig, mk: Maker, prefix: str, layers: Optional[int],
+           cross: bool = False) -> Dict:
+    """Attention parameter (sub)tree, optionally stacked over ``layers``."""
+    d, hd = cfg.d_model, cfg.hd
+    H, Kv = cfg.n_heads, cfg.n_kv_heads
+    L = () if layers is None else (layers,)
+    lax_ = () if layers is None else ("layers",)
+    p = {
+        "wq": mk(f"{prefix}.wq", L + (d, H * hd), lax_ + ("embed", "heads")),
+        "wk": mk(f"{prefix}.wk", L + (d, Kv * hd), lax_ + ("embed", "kv")),
+        "wv": mk(f"{prefix}.wv", L + (d, Kv * hd), lax_ + ("embed", "kv")),
+        "wo": mk(f"{prefix}.wo", L + (H * hd, d), lax_ + ("heads", "embed")),
+    }
+    if cfg.qk_norm:
+        p["q_norm.scale"] = mk(f"{prefix}.q_norm.scale", L + (hd,),
+                               lax_ + (None,), scale=1.0)
+        p["k_norm.scale"] = mk(f"{prefix}.k_norm.scale", L + (hd,),
+                               lax_ + (None,), scale=1.0)
+    if cross:
+        # gated cross-attention (llama-3.2-vision style tanh gate)
+        p["gate"] = mk(f"{prefix}.gate", L + (1,), lax_ + (None,), scale=0.0)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, mk: Maker, batch: int, cache_window: int,
+               layers: Optional[int], name: str = "cache") -> Dict:
+    """Ring-buffer cache stand-ins/arrays. pos = -1 marks empty slots."""
+    Kv, hd = cfg.n_kv_heads, cfg.hd
+    L = () if layers is None else (layers,)
+    lax_ = () if layers is None else ("layers",)
+    return {
+        "k": mk(f"{name}.k", L + (batch, cache_window, Kv, hd),
+                lax_ + ("batch", "cache_seq", "kv_head", None), scale=0.0),
+        "v": mk(f"{name}.v", L + (batch, cache_window, Kv, hd),
+                lax_ + ("batch", "cache_seq", "kv_head", None), scale=0.0),
+        "pos": mk(f"{name}.pos", L + (cache_window,), lax_ + (None,),
+                  scale=0.0, dtype_override=jnp.int32),
+    }
+
+
+def blank_cache(cfg: ModelConfig, batch: int, cache_window: int,
+                layers: Optional[int]) -> Dict:
+    Kv, hd = cfg.n_kv_heads, cfg.hd
+    L = () if layers is None else (layers,)
+    return {
+        "k": jnp.zeros(L + (batch, cache_window, Kv, hd), cfg.activation_dtype),
+        "v": jnp.zeros(L + (batch, cache_window, Kv, hd), cfg.activation_dtype),
+        "pos": jnp.full(L + (cache_window,), -1, jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Masks
+# ---------------------------------------------------------------------------
+def _slot(pos: Array, W: int, n_meta: int) -> Array:
+    """Ring-buffer slot for a position. Meta tokens (hymba registers) are
+    pinned in slots [0, n_meta); the rest of the cache is a ring over the
+    remaining W - n_meta slots, so registers are never evicted."""
+    if n_meta <= 0:
+        return pos % W
+    return jnp.where(pos < n_meta, pos,
+                     n_meta + (pos - n_meta) % (W - n_meta))
+
+
+def _mask(q_pos: Array, k_pos: Array, causal: bool, window: int,
+          n_meta: int) -> Array:
+    """(S_q, S_k) bool validity mask from integer positions.
+
+    window == 0 -> unlimited. k_pos < 0 -> empty cache slot. Meta tokens
+    (k_pos < n_meta) are always visible (hymba registers)."""
+    qp = q_pos[:, None]
+    kp = k_pos[None, :]
+    ok = kp >= 0
+    if causal:
+        ok &= kp <= qp
+    if window > 0:
+        in_window = kp > qp - window
+        if n_meta > 0:
+            in_window |= kp < n_meta
+        ok &= in_window
+    return ok
+
+
+def _sdpa(q: Array, k: Array, v: Array, mask: Array, scale: float) -> Array:
+    """Grouped scaled-dot-product attention.
+
+    q: (B,Sq,H,hd) k/v: (B,Sk,Kv,hd) mask: (Sq,Sk) -> (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    qg = q.reshape(B, Sq, Kv, G, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(mask[None, None, None], logits, NEG)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# Sequences at/above this length use the q-chunked path (flash-style memory:
+# the (Sq, Sk) score matrix is never materialized — at 32k it would be PBs).
+CHUNKED_THRESHOLD = 2048
+Q_CHUNK = 512
+
+
+def _sdpa_chunked(q: Array, k: Array, v: Array, *, q_pos: Array,
+                  k_pos: Array, causal: bool, window: int, n_meta: int,
+                  scale: float, chunk: int = Q_CHUNK) -> Array:
+    """Exact attention scanning over query chunks; peak score memory is
+    (B, Kv, G, chunk, Sk). The pure-jnp counterpart of the Pallas flash
+    kernel (same math, XLA-compilable on any backend)."""
+    B, Sq, H, hd = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    # Pin K/V sharding BEFORE the chunk scan: batch over 'data', heads over
+    # 'model' when divisible, seq replicated. Otherwise XLA leaves K/V in a
+    # layout that forces a re-gather inside the scan body — measured as a
+    # per-chunk all-gather (x64 chunks x layers) dominating the prefill
+    # collective term.
+    k = constrain(k, "data", None, "model", None)
+    v = constrain(v, "data", None, "model", None)
+    q = constrain(q, "data", None, "model", None)
+    chunk = min(chunk, Sq)
+    pad = (-Sq) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pad), constant_values=q_pos[-1])
+    nc = q.shape[1] // chunk
+    qc = q.reshape(B, nc, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    pc = q_pos.reshape(nc, chunk)
+
+    def body(_, inp):
+        qb, pb = inp                                    # (B,chunk,H,hd), (chunk,)
+        qg = qb.reshape(B, chunk, Kv, G, hd)
+        logits = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                            preferred_element_type=jnp.float32) * scale
+        m = _mask(pb, k_pos, causal, window, n_meta)
+        logits = jnp.where(m[None, None, None], logits, NEG)
+        probs = jax.nn.softmax(logits, axis=-1)
+        ob = jnp.einsum("bkgst,btkh->bskgh", probs.astype(v.dtype), v,
+                        preferred_element_type=jnp.float32)
+        return None, ob.reshape(B, chunk, H, hd).astype(qb.dtype)
+
+    _, out = jax.lax.scan(body, None, (qc, pc))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, nc * chunk, H, hd)
+    return out[:, :Sq]
+
+
+# ---------------------------------------------------------------------------
+# Projections
+# ---------------------------------------------------------------------------
+def _project_qkv(p: Dict, cfg: ModelConfig, x: Array, kv_src: Array,
+                 q_pos: Optional[Array], k_pos: Optional[Array],
+                 use_rope: bool) -> Tuple[Array, Array, Array]:
+    B, Sq, _ = x.shape
+    Sk = kv_src.shape[1]
+    H, Kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, Sq, H, hd)
+    k = (kv_src @ p["wk"]).reshape(B, Sk, Kv, hd)
+    v = (kv_src @ p["wv"]).reshape(B, Sk, Kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm_1d(p["q_norm.scale"], q, cfg.norm_eps)
+        k = rmsnorm_1d(p["k_norm.scale"], k, cfg.norm_eps)
+    if use_rope:
+        qc, qs = rope_angles(q_pos, hd, cfg.rope_theta)
+        kc, ks = rope_angles(k_pos, hd, cfg.rope_theta)
+        q = apply_rope(q, qc, qs)
+        k = apply_rope(k, kc, ks)
+    return q, k, v
+
+
+def _out(p: Dict, y: Array, gated: bool, x_res: Array) -> Array:
+    B, S, H, hd = y.shape
+    o = y.reshape(B, S, H * hd) @ p["wo"]
+    if gated:
+        o = jnp.tanh(p["gate"].astype(jnp.float32)).astype(o.dtype) * o
+    return o
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence attention (train / prefill / encoder)
+# ---------------------------------------------------------------------------
+def attend(p: Dict, cfg: ModelConfig, x: Array, *,
+           causal: bool = True,
+           window: int = 0,
+           n_meta: int = 0,
+           positions: Optional[Array] = None,
+           cross_src: Optional[Array] = None,
+           use_rope: bool = True,
+           use_flash: bool = False,
+           make_cache: int = 0) -> Tuple[Array, Optional[Dict]]:
+    """Attention over a full sequence.
+
+    cross_src: (B,S_src,d) — cross-attention over a source sequence (no rope,
+    non-causal). make_cache > 0: also return a ring cache of that window
+    holding the last positions (prefill). Returns (out, cache|None).
+    """
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    if cross_src is not None:
+        kv_src = cross_src
+        k_pos = jnp.arange(kv_src.shape[1], dtype=jnp.int32)
+        causal, use_rope = False, False
+    else:
+        kv_src = x
+        k_pos = positions
+    q, k, v = _project_qkv(p, cfg, x, kv_src, positions, k_pos, use_rope)
+
+    scale = 1.0 / (cfg.hd ** 0.5)
+    if use_flash and causal and cross_src is None and window == 0:
+        from repro.kernels.flash_attention import ops as flash_ops
+        y = flash_ops.flash_attention(q, k, v, causal=True, scale=scale)
+    elif S >= CHUNKED_THRESHOLD:
+        y = _sdpa_chunked(q, k, v, q_pos=positions, k_pos=k_pos,
+                          causal=causal, window=window, n_meta=n_meta,
+                          scale=scale)
+    else:
+        mask = _mask(positions, k_pos, causal, window, n_meta)
+        y = _sdpa(q, k, v, mask, scale)
+    out = _out(p, y, "gate" in p, x)
+
+    cache = None
+    if make_cache:
+        W = make_cache
+        Sk = k.shape[1]
+        if Sk <= W:
+            keep = jnp.arange(Sk)
+        else:
+            # meta tokens pinned + the last (W - n_meta) ordinary positions
+            keep = jnp.concatenate([
+                jnp.arange(n_meta),
+                jnp.arange(Sk - (W - n_meta), Sk)])
+        slots = _slot(keep, W, n_meta)
+        cache = {
+            "k": jnp.zeros((B, W) + k.shape[2:], k.dtype).at[:, slots].set(k[:, keep]),
+            "v": jnp.zeros((B, W) + v.shape[2:], v.dtype).at[:, slots].set(v[:, keep]),
+            "pos": jnp.full((W,), -1, jnp.int32).at[slots].set(keep.astype(jnp.int32)),
+        }
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# Single-token decode with ring cache
+# ---------------------------------------------------------------------------
+def decode_step(p: Dict, cfg: ModelConfig, x: Array, cache: Dict, index: Array,
+                *, window: int = 0, n_meta: int = 0,
+                cross_cache: Optional[Dict] = None,
+                use_rope: bool = True) -> Tuple[Array, Dict]:
+    """One decode step. x: (B,1,d); index: () int32 current position.
+
+    cross_cache: {'k','v'} precomputed source KV (B,S_src,Kv,hd) — used
+    as-is (encoder-decoder / vision cross layers); self cache not updated.
+    """
+    B = x.shape[0]
+    if cross_cache is not None:
+        q = (x @ p["wq"]).reshape(B, 1, cfg.n_heads, cfg.hd)
+        if cfg.qk_norm:
+            q = rmsnorm_1d(p["q_norm.scale"], q, cfg.norm_eps)
+        k, v = cross_cache["k"], cross_cache["v"]
+        mask = jnp.ones((1, k.shape[1]), bool)
+        y = _sdpa(q, k, v, mask, 1.0 / (cfg.hd ** 0.5))
+        return _out(p, y, "gate" in p, x), cache
+
+    pos = jnp.asarray(index, jnp.int32)[None]
+    q, k_new, v_new = _project_qkv(p, cfg, x, x, pos, pos, use_rope)
+    W = cache["k"].shape[1]
+    slot = _slot(jnp.asarray(index, jnp.int32), W, n_meta)
+    cache = {
+        "k": jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1),
+        "v": jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1),
+        "pos": jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], pos, slot, axis=0),
+    }
+    mask = _mask(pos, cache["pos"], True, window, n_meta)
+    y = _sdpa(q, cache["k"], cache["v"], mask, 1.0 / (cfg.hd ** 0.5))
+    return _out(p, y, "gate" in p, x), cache
+
+
+def precompute_cross_kv(p: Dict, cfg: ModelConfig, src: Array) -> Dict:
+    """Source KV for cross-attention layers (prefill side)."""
+    B, S, _ = src.shape
+    k = (src @ p["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    v = (src @ p["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    if cfg.qk_norm:
+        k = rmsnorm_1d(p["k_norm.scale"], k, cfg.norm_eps)
+    return {"k": k, "v": v}

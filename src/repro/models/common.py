@@ -1,0 +1,285 @@
+"""Shared model configuration + parameter-tree construction machinery.
+
+Parameter trees are built by module ``params(cfg, mk, ...)`` functions that
+receive a *maker* callback::
+
+    mk(name, shape, axes, scale)
+
+With different makers the same code yields concrete initialized arrays, a
+matching tree of ``jax.ShapeDtypeStruct`` (for ``eval_shape``-free dry-runs)
+or a matching tree of logical-axis tuples (for sharding rules) — structure
+can never drift between the three. Logical axis names used across modules:
+
+    'embed'    residual stream dim            -> replicated
+    'vocab'    vocabulary dim                 -> 'model'
+    'heads'    flattened q-heads*head_dim     -> 'model'
+    'kv'       flattened kv-heads*head_dim    -> 'model' (replicate if indivisible)
+    'ff'       feed-forward hidden            -> 'model'
+    'experts'  MoE expert dim                 -> 'model'
+    'layers'   scanned layer dim              -> replicated
+    None       anything else                  -> replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0               # 0 -> d_model // n_heads
+    mlp: str = "swiglu"             # swiglu | gelu
+    norm_eps: float = 1e-5
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = False
+    # --- MoE ---
+    n_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    router_z_weight: float = 1e-3
+    # --- SSM / RWKV ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    conv_width: int = 4
+    rwkv_decay_lora: int = 64
+    # --- hybrid (hymba) ---
+    sliding_window: int = 0         # 0 -> full attention everywhere
+    global_layers: Tuple[int, ...] = ()
+    n_meta_tokens: int = 0
+    # --- encoder-decoder (seamless) ---
+    n_encoder_layers: int = 0
+    source_is_embeddings: bool = False   # audio/vision stub frontend
+    # --- VLM (llama-3.2-vision) ---
+    cross_attn_every: int = 0       # 0 -> no interleaved cross-attn layers
+    vision_seq: int = 1024          # stub patch-embedding count
+    # --- dtypes ---
+    param_dtype: Any = jnp.bfloat16
+    activation_dtype: Any = jnp.bfloat16
+    # --- schedule hint (minicpm WSD) ---
+    schedule: str = "cosine"        # cosine | wsd
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to 256 so the embedding/logits shard over any mesh
+        axis combination (real token ids never touch the padding)."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch honestly serve a 512k context? (SSM state or SWA)."""
+        return self.family in ("ssm", "hybrid")
+
+    def window_for_layer(self, i: int) -> int:
+        """Effective attention window of layer i (0 = unlimited/full)."""
+        if self.sliding_window == 0 or i in self.global_layers:
+            return 0
+        return self.sliding_window
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """Tiny same-family variant for CPU smoke tests."""
+        small = dict(
+            n_layers=min(self.n_layers, 2),
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 4) if self.n_kv_heads > 1 else 1,
+            head_dim=16,
+            d_ff=128,
+            vocab_size=256,
+            n_experts=min(self.n_experts, 4),
+            experts_per_token=min(self.experts_per_token, 2),
+            ssm_state=min(self.ssm_state, 8) if self.ssm_state else 0,
+            rwkv_decay_lora=8,
+            sliding_window=min(self.sliding_window, 16) if self.sliding_window else 0,
+            global_layers=tuple(g for g in self.global_layers if g < 2),
+            n_meta_tokens=min(self.n_meta_tokens, 8),
+            n_encoder_layers=min(self.n_encoder_layers, 2),
+            cross_attn_every=2 if self.cross_attn_every else 0,
+            vision_seq=16,
+            param_dtype=jnp.float32,
+            activation_dtype=jnp.float32,
+            name=self.name + "-smoke",
+        )
+        small.update(overrides)
+        return dataclasses.replace(self, **small)
+
+    # -- parameter accounting (used by roofline MODEL_FLOPS) ----------------
+    def param_count(self) -> Tuple[int, int]:
+        """(total, active) parameter counts, analytic."""
+        d, hd = self.d_model, self.hd
+        q = d * self.n_heads * hd
+        kv = 2 * d * self.n_kv_heads * hd
+        o = self.n_heads * hd * d
+        attn = q + kv + o
+        if self.mlp == "swiglu":
+            ffn_one = 3 * d * self.d_ff
+        else:
+            ffn_one = 2 * d * self.d_ff
+        if self.is_moe:
+            ffn_tot = self.n_experts * ffn_one + d * self.n_experts
+            ffn_act = self.experts_per_token * ffn_one + d * self.n_experts
+        else:
+            ffn_tot = ffn_act = ffn_one
+        if self.family == "ssm":
+            # rwkv6: tm (r,k,v,g,o + decay lora) + cm (k: d->ff, v: ff->d, r: d->d)
+            tm = 5 * d * d + self.rwkv_decay_lora * 2 * d * 6
+            cm = d * self.d_ff + self.d_ff * d + d * d
+            per_layer_tot = per_layer_act = tm + cm
+        elif self.family == "hybrid":
+            d_in = self.ssm_expand * d
+            ssm = d * 2 * d_in + d_in * d + d_in * (2 * self.ssm_state + 1) \
+                + self.conv_width * d_in
+            per_layer_tot = per_layer_act = attn + ffn_tot + ssm
+        else:
+            per_layer_tot = attn + ffn_tot
+            per_layer_act = attn + ffn_act
+        n_dec = self.n_layers
+        total = n_dec * per_layer_tot
+        active = n_dec * per_layer_act
+        if self.n_encoder_layers:
+            enc = self.n_encoder_layers * (attn + ffn_tot)
+            # decoder layers also carry cross-attention
+            total += enc + n_dec * attn
+            active += enc + n_dec * attn
+        if self.cross_attn_every:
+            n_cross = self.n_layers // self.cross_attn_every
+            # those layers were counted as self-attn; cross adds its own attn
+            total += n_cross * attn
+            active += n_cross * attn
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return total + emb, active + emb
+
+
+# ---------------------------------------------------------------------------
+# Parameter tree makers
+# ---------------------------------------------------------------------------
+Maker = Callable[..., Any]
+
+
+def init_maker(rng: Array, dtype) -> Maker:
+    """Maker producing concrete initialized arrays (trunc-normal / zeros)."""
+    counter = [0]
+
+    def mk(name: str, shape: Sequence[int], axes: Sequence[Optional[str]],
+           scale: Optional[float] = None, dtype_override=None):
+        dt = dtype_override or dtype
+        counter[0] += 1
+        key = jax.random.fold_in(rng, counter[0])
+        if scale == 0.0:
+            return jnp.zeros(shape, dt)
+        if scale is None:  # fan-in scaled
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            scale = 1.0 / math.sqrt(max(fan_in, 1))
+        if name.endswith("norm.scale"):
+            return jnp.ones(shape, dt)
+        return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32)
+                * scale).astype(dt)
+
+    return mk
+
+
+def shape_maker(dtype) -> Maker:
+    def mk(name, shape, axes, scale=None, dtype_override=None):
+        return jax.ShapeDtypeStruct(tuple(shape), dtype_override or dtype)
+    return mk
+
+
+def axes_maker() -> Maker:
+    def mk(name, shape, axes, scale=None, dtype_override=None):
+        return tuple(axes)
+    return mk
+
+
+# ---------------------------------------------------------------------------
+# Sharding constraint helper (no-op without an active named mesh)
+# ---------------------------------------------------------------------------
+def constrain(x, *axes):
+    """with_sharding_constraint by mesh-axis name, dropping axes that are
+    absent, already used, or don't divide. Model code uses this to pin
+    intermediates XLA's SPMD propagation gets wrong (MoE dispatch buffers,
+    chunked-attention KV) — measured pathologies are documented at each
+    call site."""
+    import jax as _jax
+    from jax.sharding import NamedSharding as _NS, PartitionSpec as _P
+
+    mesh = _jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return x
+    spec = []
+    used = set()
+    for dim, name in zip(x.shape, axes):
+        ok = (name is not None and name in mesh.axis_names
+              and name not in used and dim % mesh.shape[name] == 0)
+        spec.append(name if ok else None)
+        if ok:
+            used.add(name)
+    return _jax.lax.with_sharding_constraint(x, _NS(mesh, _P(*spec)))
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+def norm_params(mk: Maker, prefix: str, d: int, layers: Optional[int] = None):
+    shape = (d,) if layers is None else (layers, d)
+    axes = (None, "embed")[-len(shape):] if layers is None else ("layers", "embed")
+    return {"scale": mk(prefix + ".norm.scale", shape, axes, scale=1.0)}
+
+
+def rmsnorm(p, x: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def rmsnorm_1d(scale: Array, x: Array, eps: float = 1e-5) -> Array:
+    """RMSNorm over the last dim with a bare scale vector (qk-norm etc.)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+def groupnorm_heads(scale: Array, x: Array, n_heads: int,
+                    eps: float = 1e-5) -> Array:
+    """GroupNorm with one group per head over (..., H*hd) (RWKV wkv output)."""
+    dt = x.dtype
+    *lead, d = x.shape
+    xf = x.astype(jnp.float32).reshape(*lead, n_heads, d // n_heads)
+    mean = xf.mean(-1, keepdims=True)
+    var = ((xf - mean) ** 2).mean(-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y.reshape(*lead, d)
+    return (y * scale.astype(jnp.float32)).astype(dt)

@@ -1,0 +1,35 @@
+"""Dense feed-forward blocks: SwiGLU (llama family) and GeLU (granite,
+seamless)."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import Array, Maker, ModelConfig
+
+
+def params(cfg: ModelConfig, mk: Maker, prefix: str,
+           layers: Optional[int]) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    L = () if layers is None else (layers,)
+    lax_ = () if layers is None else ("layers",)
+    if cfg.mlp == "swiglu":
+        return {
+            "wg": mk(f"{prefix}.wg", L + (d, f), lax_ + ("embed", "ff")),
+            "wu": mk(f"{prefix}.wu", L + (d, f), lax_ + ("embed", "ff")),
+            "wd": mk(f"{prefix}.wd", L + (f, d), lax_ + ("ff", "embed")),
+        }
+    if cfg.mlp == "gelu":
+        return {
+            "wu": mk(f"{prefix}.wu", L + (d, f), lax_ + ("embed", "ff")),
+            "wd": mk(f"{prefix}.wd", L + (f, d), lax_ + ("ff", "embed")),
+        }
+    raise ValueError(f"unknown mlp {cfg.mlp!r}")
+
+
+def apply(p: Dict, cfg: ModelConfig, x: Array) -> Array:
+    if cfg.mlp == "swiglu":
+        return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+    return jax.nn.gelu(x @ p["wu"], approximate=True) @ p["wd"]

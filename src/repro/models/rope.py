@@ -1,0 +1,34 @@
+"""Rotary position embeddings (half-rotation convention)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import Array
+
+
+def rope_angles(positions: Array, head_dim: int,
+                theta: float = 10_000.0) -> tuple[Array, Array]:
+    """cos/sin tables for integer positions.
+
+    positions: (...,) int32 -> cos,sin: (..., head_dim//2) float32.
+    """
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """Rotate pairs (x1, x2) = (x[..:half], x[half:..]).
+
+    x: (..., S, H, hd); cos/sin: (S, hd//2) broadcast over batch/heads.
+    """
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    # cos/sin (S, half) -> (S, 1, half) to broadcast over the head axis.
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.astype(dt)

@@ -1,0 +1,186 @@
+"""RWKV6 ("Finch") blocks — attention-free, data-dependent decay.
+
+Per layer: TimeMix (the WKV linear recurrence) + ChannelMix (gated FFN with
+token shift). Heads of size ``hd``; per-head state S ∈ R^{hd×hd}:
+
+    y_t = r_t · (S_{t-1} + diag(u) k_t v_tᵀ)
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+
+with per-channel data-dependent decay w_t = exp(-exp(wbase + lora(x̃_t))) in
+(0,1). Token shift mixes x_t with x_{t-1} using learned (and for RWKV6,
+data-dependent LoRA) mixing coefficients.
+
+The time recurrence here is the pure-jnp oracle (`lax.scan` over time and a
+single fused step for decode). The chunked MXU formulation lives in
+``repro.kernels.rwkv6`` and is what a real TPU run uses for long sequences.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Array, Maker, ModelConfig, groupnorm_heads
+
+# Five mixing targets in TimeMix: r, k, v, g(ate), w(decay)
+_MIX = ("r", "k", "v", "g", "w")
+
+
+def tm_params(cfg: ModelConfig, mk: Maker, prefix: str,
+              layers: Optional[int]) -> Dict:
+    d, lora = cfg.d_model, cfg.rwkv_decay_lora
+    L = () if layers is None else (layers,)
+    A = () if layers is None else ("layers",)
+    p = {
+        # token-shift base mixing coefficients per target
+        "mix_base": mk(f"{prefix}.mix_base", L + (len(_MIX), d), A + (None, "embed"),
+                       scale=0.5),
+        # data-dependent token-shift LoRA (shared A, per-target B)
+        "mix_A": mk(f"{prefix}.mix_A", L + (d, lora), A + ("embed", None)),
+        "mix_B": mk(f"{prefix}.mix_B", L + (len(_MIX), lora, d), A + (None, None, "embed"),
+                    scale=0.0),
+        "wr": mk(f"{prefix}.wr", L + (d, d), A + ("embed", "heads")),
+        "wk": mk(f"{prefix}.wk", L + (d, d), A + ("embed", "heads")),
+        "wv": mk(f"{prefix}.wv", L + (d, d), A + ("embed", "heads")),
+        "wg": mk(f"{prefix}.wg", L + (d, d), A + ("embed", "heads")),
+        "wo": mk(f"{prefix}.wo", L + (d, d), A + ("heads", "embed")),
+        # decay: w_t = exp(-exp(decay_base + lora))
+        "decay_base": mk(f"{prefix}.decay_base", L + (d,), A + ("embed",), scale=0.0),
+        "decay_A": mk(f"{prefix}.decay_A", L + (d, lora), A + ("embed", None)),
+        "decay_B": mk(f"{prefix}.decay_B", L + (lora, d), A + (None, "embed"),
+                      scale=0.0),
+        "bonus_u": mk(f"{prefix}.bonus_u", L + (d,), A + ("embed",), scale=0.5),
+        "gn.scale": mk(f"{prefix}.gn.scale", L + (d,), A + ("embed",), scale=1.0),
+    }
+    return p
+
+
+def cm_params(cfg: ModelConfig, mk: Maker, prefix: str,
+              layers: Optional[int]) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    L = () if layers is None else (layers,)
+    A = () if layers is None else ("layers",)
+    return {
+        "mix_k": mk(f"{prefix}.mix_k", L + (d,), A + ("embed",), scale=0.5),
+        "mix_r": mk(f"{prefix}.mix_r", L + (d,), A + ("embed",), scale=0.5),
+        "wk": mk(f"{prefix}.wk", L + (d, f), A + ("embed", "ff")),
+        "wv": mk(f"{prefix}.wv", L + (f, d), A + ("ff", "embed")),
+        "wr": mk(f"{prefix}.wr", L + (d, d), A + ("embed", "heads")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Recurrent state ("cache" for serving)
+# ---------------------------------------------------------------------------
+def blank_state(cfg: ModelConfig, batch: int, layers: Optional[int]) -> Dict:
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    L = () if layers is None else (layers,)
+    f32 = jnp.float32
+    return {
+        "wkv": jnp.zeros(L + (batch, H, hd, hd), f32),
+        "tm_prev": jnp.zeros(L + (batch, cfg.d_model), cfg.activation_dtype),
+        "cm_prev": jnp.zeros(L + (batch, cfg.d_model), cfg.activation_dtype),
+    }
+
+
+def state_specs(cfg: ModelConfig, mk: Maker, batch: int,
+                layers: Optional[int], name: str = "rwkv_state") -> Dict:
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    L = () if layers is None else (layers,)
+    A = () if layers is None else ("layers",)
+    return {
+        "wkv": mk(f"{name}.wkv", L + (batch, H, hd, hd),
+                  A + ("batch", "heads_only", None, None), scale=0.0,
+                  dtype_override=jnp.float32),
+        "tm_prev": mk(f"{name}.tm_prev", L + (batch, cfg.d_model),
+                      A + ("batch", "embed"), scale=0.0),
+        "cm_prev": mk(f"{name}.cm_prev", L + (batch, cfg.d_model),
+                      A + ("batch", "embed"), scale=0.0),
+    }
+
+
+# ---------------------------------------------------------------------------
+# TimeMix
+# ---------------------------------------------------------------------------
+def _token_shift(x: Array, prev: Array) -> Array:
+    """x_{t-1} with ``prev`` filling t=0. x: (B,S,d), prev: (B,d)."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _tm_project(p: Dict, cfg: ModelConfig, x: Array, prev: Array):
+    """Compute r,k,v,g,w sequences from inputs (B,S,d)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    xs = _token_shift(x, prev)
+    delta = xs - x
+    # data-dependent mixing: mix_t = base + tanh(x A) B   (per target)
+    low = jnp.tanh(x @ p["mix_A"])                        # (B,S,lora)
+    dyn = jnp.einsum("bsl,mld->mbsd", low, p["mix_B"])    # (M,B,S,d)
+    mixed = x[None] + delta[None] * (p["mix_base"][:, None, None] + dyn)
+    xr, xk, xv, xg, xw = mixed
+    r = (xr @ p["wr"]).reshape(B, S, H, hd)
+    k = (xk @ p["wk"]).reshape(B, S, H, hd)
+    v = (xv @ p["wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+    logw = p["decay_base"] + jnp.tanh(xw @ p["decay_A"]) @ p["decay_B"]
+    w = jnp.exp(-jnp.exp(logw.astype(jnp.float32))).reshape(B, S, H, hd)
+    u = p["bonus_u"].reshape(H, hd)
+    return r, k, v, g, w, u
+
+
+def wkv_ref(r: Array, k: Array, v: Array, w: Array, u: Array,
+            state: Array) -> Tuple[Array, Array]:
+    """Oracle WKV recurrence via lax.scan over time.
+
+    r,k,v,w: (B,S,H,hd) f32; u: (H,hd); state: (B,H,hd,hd) f32.
+    Returns y: (B,S,H,hd), final state.
+    """
+    def step(S_, inp):
+        r_t, k_t, v_t, w_t = inp                       # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]     # (B,H,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t,
+                       S_ + u[None, :, :, None] * kv)
+        S_ = w_t[..., :, None] * S_ + kv
+        return S_, y
+
+    seq = jax.tree.map(lambda a: jnp.moveaxis(a.astype(jnp.float32), 1, 0),
+                       (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, seq)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def tm_apply(p: Dict, cfg: ModelConfig, x: Array, state: Dict,
+             use_kernel: bool = False) -> Tuple[Array, Dict]:
+    """TimeMix over a sequence. state: blank_state slice (no layer axis)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    r, k, v, g, w, u = _tm_project(p, cfg, x, state["tm_prev"])
+    if use_kernel:
+        from repro.kernels.rwkv6 import ops as rwkv_ops
+        y, new_wkv = rwkv_ops.wkv(r, k, v, w, u, state["wkv"])
+    else:
+        y, new_wkv = wkv_ref(r.astype(jnp.float32), k.astype(jnp.float32),
+                             v.astype(jnp.float32), w, u, state["wkv"])
+    y = y.reshape(B, S, d).astype(x.dtype)
+    y = groupnorm_heads(p["gn.scale"], y, H, cfg.norm_eps) * g
+    out = y @ p["wo"]
+    new_state = dict(state, wkv=new_wkv, tm_prev=x[:, -1])
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# ChannelMix
+# ---------------------------------------------------------------------------
+def cm_apply(p: Dict, cfg: ModelConfig, x: Array,
+             state: Dict) -> Tuple[Array, Dict]:
+    xs = _token_shift(x, state["cm_prev"])
+    xk = x + (xs - x) * p["mix_k"]
+    xr = x + (xs - x) * p["mix_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    out = jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])
+    return out, dict(state, cm_prev=x[:, -1])

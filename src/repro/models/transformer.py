@@ -1,0 +1,409 @@
+"""Layer-stack assembly: segments of scanned blocks covering all 10 archs.
+
+A model is a *plan*: a list of :class:`Segment`s. Each segment scans ``n``
+repeats of a *pattern* — a tuple of :class:`BlockCfg`s (usually one; the
+VLM uses a 5-block superblock: 4 self-attention + 1 gated cross-attention).
+Scanning keeps the HLO size O(#segments), not O(#layers) — essential for
+compiling 88–100-layer configs — and parameters are stacked on a leading
+``layers`` axis per segment.
+
+Block kinds (``BlockCfg.mixer``):
+    'attn'    causal GQA self-attention (window/meta statically configured)
+    'bidir'   bidirectional self-attention (encoder)
+    'cross'   gated cross-attention over a source sequence (VLM layers)
+    'rwkv'    RWKV6 TimeMix (attention-free)
+    'hybrid'  parallel attention + Mamba SSM heads (hymba)
+FFN kinds (``BlockCfg.ffn``): 'mlp' | 'moe' | 'rwkv_cm'.
+Encoder-decoder layers set ``has_cross`` (self + cross + ffn).
+
+Every block is pre-norm residual. ``mode`` ∈ train | prefill | decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, mlp, moe, rwkv, ssm
+from .common import (Array, Maker, ModelConfig, norm_params, rmsnorm,
+                     rmsnorm_1d)
+
+AUX_KEYS = ("load_balance", "router_z", "dropped_frac")
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockCfg:
+    mixer: str = "attn"        # attn | bidir | cross | rwkv | hybrid
+    window: int = 0            # sliding window (0 = full)
+    ffn: str = "mlp"           # mlp | moe | rwkv_cm
+    has_cross: bool = False    # enc-dec decoder block
+    use_rope: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    pattern: Tuple[BlockCfg, ...]
+    n: int
+
+
+# ---------------------------------------------------------------------------
+# Plans
+# ---------------------------------------------------------------------------
+def make_plan(cfg: ModelConfig) -> List[Segment]:
+    """Decoder/backbone plan for the configured family."""
+    if cfg.family == "ssm":
+        return [Segment((BlockCfg(mixer="rwkv", ffn="rwkv_cm"),), cfg.n_layers)]
+
+    ffn = "moe" if cfg.is_moe else "mlp"
+    if cfg.family == "hybrid":
+        segs: List[Segment] = []
+        i = 0
+        while i < cfg.n_layers:
+            w = cfg.window_for_layer(i)
+            j = i
+            while j < cfg.n_layers and cfg.window_for_layer(j) == w:
+                j += 1
+            segs.append(Segment((BlockCfg(mixer="hybrid", window=w, ffn=ffn),),
+                                j - i))
+            i = j
+        return segs
+
+    if cfg.family == "vlm" and cfg.cross_attn_every:
+        k = cfg.cross_attn_every
+        assert cfg.n_layers % k == 0
+        pattern = tuple([BlockCfg(mixer="attn", ffn=ffn)] * (k - 1)
+                        + [BlockCfg(mixer="cross", ffn=ffn)])
+        return [Segment(pattern, cfg.n_layers // k)]
+
+    if cfg.family == "encdec":
+        return [Segment((BlockCfg(mixer="attn", ffn=ffn, has_cross=True),),
+                        cfg.n_layers)]
+
+    # dense / moe decoder-only
+    return [Segment((BlockCfg(mixer="attn", ffn=ffn,
+                              window=cfg.sliding_window),), cfg.n_layers)]
+
+
+def make_encoder_plan(cfg: ModelConfig) -> List[Segment]:
+    ffn = "moe" if cfg.is_moe else "mlp"
+    return [Segment((BlockCfg(mixer="bidir", ffn=ffn, use_rope=True),),
+                    cfg.n_encoder_layers)]
+
+
+def plan_layers(plan: List[Segment]) -> int:
+    return sum(len(s.pattern) * s.n for s in plan)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+def block_params(cfg: ModelConfig, bc: BlockCfg, mk: Maker, prefix: str,
+                 n: int) -> Dict:
+    p: Dict[str, Any] = {"ln1": norm_params(mk, f"{prefix}.ln1", cfg.d_model, n)}
+    if bc.mixer in ("attn", "bidir"):
+        p["mixer"] = attention.params(cfg, mk, f"{prefix}.attn", n)
+    elif bc.mixer == "cross":
+        p["mixer"] = attention.params(cfg, mk, f"{prefix}.xattn", n, cross=True)
+    elif bc.mixer == "rwkv":
+        p["mixer"] = rwkv.tm_params(cfg, mk, f"{prefix}.tm", n)
+    elif bc.mixer == "hybrid":
+        p["mixer"] = {
+            "attn": attention.params(cfg, mk, f"{prefix}.attn", n),
+            "ssm": ssm.params(cfg, mk, f"{prefix}.ssm", n),
+            "attn_norm.scale": mk(f"{prefix}.attn_norm.scale",
+                                  (n, cfg.d_model), ("layers", "embed"),
+                                  scale=1.0),
+            "beta": mk(f"{prefix}.beta", (n, 2), ("layers", None), scale=1.0),
+        }
+    else:
+        raise ValueError(bc.mixer)
+    if bc.has_cross:
+        p["ln_cross"] = norm_params(mk, f"{prefix}.ln_cross", cfg.d_model, n)
+        p["cross"] = attention.params(cfg, mk, f"{prefix}.cross", n)
+    p["ln2"] = norm_params(mk, f"{prefix}.ln2", cfg.d_model, n)
+    if bc.ffn == "mlp":
+        p["ffn"] = mlp.params(cfg, mk, f"{prefix}.mlp", n)
+    elif bc.ffn == "moe":
+        p["ffn"] = moe.params(cfg, mk, f"{prefix}.moe", n)
+    elif bc.ffn == "rwkv_cm":
+        p["ffn"] = rwkv.cm_params(cfg, mk, f"{prefix}.cm", n)
+    else:
+        raise ValueError(bc.ffn)
+    return p
+
+
+def plan_params(cfg: ModelConfig, plan: List[Segment], mk: Maker,
+                prefix: str) -> List[Tuple[Dict, ...]]:
+    return [
+        tuple(block_params(cfg, bc, mk, f"{prefix}.seg{i}.pos{j}", seg.n)
+              for j, bc in enumerate(seg.pattern))
+        for i, seg in enumerate(plan)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+def _cache_window(bc: BlockCfg, cfg: ModelConfig, max_seq: int) -> int:
+    if bc.window > 0:
+        return min(bc.window + cfg.n_meta_tokens, max_seq)
+    return max_seq
+
+
+def blank_plan_cache(cfg: ModelConfig, plan: List[Segment], batch: int,
+                     max_seq: int) -> List[Tuple[Any, ...]]:
+    """Decode caches mirroring the plan structure (stacked per segment)."""
+    out = []
+    for seg in plan:
+        caches = []
+        for bc in seg.pattern:
+            if bc.mixer in ("attn", "bidir"):
+                c = attention.blank_cache(cfg, batch,
+                                          _cache_window(bc, cfg, max_seq), seg.n)
+            elif bc.mixer == "cross":
+                c = None  # static cross KV passed separately
+            elif bc.mixer == "rwkv":
+                c = rwkv.blank_state(cfg, batch, seg.n)
+            elif bc.mixer == "hybrid":
+                c = {"attn": attention.blank_cache(
+                        cfg, batch, _cache_window(bc, cfg, max_seq), seg.n),
+                     "ssm": ssm.blank_state(cfg, batch, seg.n)}
+            else:
+                raise ValueError(bc.mixer)
+            caches.append(c)
+        out.append(tuple(caches))
+    return out
+
+
+def plan_cache_specs(cfg: ModelConfig, plan: List[Segment], mk: Maker,
+                     batch: int, max_seq: int, name: str = "cache"):
+    out = []
+    for i, seg in enumerate(plan):
+        caches = []
+        for j, bc in enumerate(seg.pattern):
+            nm = f"{name}.seg{i}.pos{j}"
+            if bc.mixer in ("attn", "bidir"):
+                c = attention.init_cache(cfg, mk, batch,
+                                         _cache_window(bc, cfg, max_seq),
+                                         seg.n, nm)
+            elif bc.mixer == "cross":
+                c = None
+            elif bc.mixer == "rwkv":
+                c = rwkv.state_specs(cfg, mk, batch, seg.n, nm)
+            elif bc.mixer == "hybrid":
+                c = {"attn": attention.init_cache(
+                        cfg, mk, batch, _cache_window(bc, cfg, max_seq),
+                        seg.n, nm + ".attn"),
+                     "ssm": ssm.state_specs(cfg, mk, batch, seg.n, nm + ".ssm")}
+            else:
+                raise ValueError(bc.mixer)
+            caches.append(c)
+        out.append(tuple(caches))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+def _zero_aux() -> Dict[str, Array]:
+    return {k: jnp.float32(0.0) for k in AUX_KEYS}
+
+
+def block_apply(bc: BlockCfg, cfg: ModelConfig, p: Dict, x: Array, *,
+                mode: str,
+                cache: Any = None,
+                index: Optional[Array] = None,
+                cross_src: Optional[Array] = None,
+                cross_kv: Any = None,
+                positions: Optional[Array] = None,
+                use_flash: bool = False,
+                use_rwkv_kernel: bool = False,
+                cache_len: Optional[int] = None,
+                ) -> Tuple[Array, Any, Dict[str, Array]]:
+    """Apply one block. Returns (x, new_cache, aux).
+
+    cache_len: decode budget for prefill-built ring caches (>= prompt len +
+    planned decode steps); defaults to the prompt length."""
+    aux = _zero_aux()
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    n_meta = cfg.n_meta_tokens if bc.window > 0 else 0
+    new_cache = cache
+
+    if bc.mixer in ("attn", "bidir"):
+        causal = bc.mixer == "attn"
+        if mode == "decode":
+            o, new_cache = attention.decode_step(
+                p["mixer"], cfg, h, cache, index, window=bc.window,
+                n_meta=n_meta, use_rope=bc.use_rope)
+        else:
+            o, new_cache = attention.attend(
+                p["mixer"], cfg, h, causal=causal, window=bc.window,
+                n_meta=n_meta, positions=positions, use_rope=bc.use_rope,
+                use_flash=use_flash,
+                make_cache=_cache_window(bc, cfg, cache_len or h.shape[1])
+                if mode == "prefill" and causal else 0)
+    elif bc.mixer == "cross":
+        if mode == "decode":
+            o, _ = attention.decode_step(p["mixer"], cfg, h, None, index,
+                                         cross_cache=cross_kv)
+            new_cache = cache
+        else:
+            o, _ = attention.attend(p["mixer"], cfg, h, cross_src=cross_src)
+    elif bc.mixer == "rwkv":
+        if mode == "decode":
+            o, new_cache = rwkv.tm_apply(p["mixer"], cfg, h, cache,
+                                         use_kernel=False)
+        else:
+            state = cache if cache is not None else rwkv.blank_state(
+                cfg, h.shape[0], None)
+            o, new_cache = rwkv.tm_apply(p["mixer"], cfg, h, state,
+                                         use_kernel=use_rwkv_kernel)
+    elif bc.mixer == "hybrid":
+        pm = p["mixer"]
+        if mode == "decode":
+            oa, ca = attention.decode_step(pm["attn"], cfg, h, cache["attn"],
+                                           index, window=bc.window,
+                                           n_meta=n_meta)
+            os_, cs = ssm.apply_step(pm["ssm"], cfg, h, cache["ssm"])
+        else:
+            oa, ca = attention.attend(
+                pm["attn"], cfg, h, causal=True, window=bc.window,
+                n_meta=n_meta, positions=positions, use_flash=use_flash,
+                make_cache=_cache_window(bc, cfg, cache_len or h.shape[1])
+                if mode == "prefill" else 0)
+            st = (cache or {}).get("ssm") if cache else None
+            if st is None:
+                st = ssm.blank_state(cfg, h.shape[0], None)
+            os_, cs = ssm.apply_seq(pm["ssm"], cfg, h, st)
+        oa = rmsnorm_1d(pm["attn_norm.scale"], oa, cfg.norm_eps)
+        beta = pm["beta"].astype(jnp.float32)
+        o = (beta[0] * oa.astype(jnp.float32)
+             + beta[1] * os_.astype(jnp.float32)) * 0.5
+        o = o.astype(x.dtype)
+        new_cache = {"attn": ca, "ssm": cs}
+    else:
+        raise ValueError(bc.mixer)
+    x = x + o
+
+    if bc.has_cross:
+        h = rmsnorm(p["ln_cross"], x, cfg.norm_eps)
+        if mode == "decode":
+            o, _ = attention.decode_step(p["cross"], cfg, h, None, index,
+                                         cross_cache=cross_kv)
+        else:
+            o, _ = attention.attend(p["cross"], cfg, h, cross_src=cross_src)
+        x = x + o
+
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if bc.ffn == "mlp":
+        o = mlp.apply(p["ffn"], cfg, h)
+    elif bc.ffn == "moe":
+        o, aux = moe.apply(p["ffn"], cfg, h)
+    elif bc.ffn == "rwkv_cm":
+        if mode == "decode":
+            o, new_cache = _cm_with_state(p["ffn"], cfg, h, new_cache)
+        else:
+            st = new_cache if new_cache is not None else rwkv.blank_state(
+                cfg, h.shape[0], None)
+            o, new_cache = rwkv.cm_apply(p["ffn"], cfg, h, st)
+    else:
+        raise ValueError(bc.ffn)
+    return x + o, new_cache, aux
+
+
+def _cm_with_state(p, cfg, h, state):
+    return rwkv.cm_apply(p, cfg, h, state)
+
+
+# ---------------------------------------------------------------------------
+# Plan application (scan over segments)
+# ---------------------------------------------------------------------------
+def _nested_group(n: int) -> int:
+    """Group size for two-level remat: the divisor of n nearest sqrt(n).
+    Live activation boundaries go from n to n/G + G ≈ 2·sqrt(n) at the cost
+    of one extra forward recompute per group."""
+    if n < 16:
+        return 1
+    target = max(int(n ** 0.5), 2)
+    for delta in range(target):
+        for g in (target - delta, target + delta):
+            if 1 < g < n and n % g == 0:
+                return g
+    return 1
+
+
+def plan_apply(cfg: ModelConfig, plan: List[Segment], params: List,
+               x: Array, *,
+               mode: str,
+               caches: Optional[List] = None,
+               index: Optional[Array] = None,
+               cross_src: Optional[Array] = None,
+               cross_kvs: Optional[List] = None,
+               positions: Optional[Array] = None,
+               use_flash: bool = False,
+               use_rwkv_kernel: bool = False,
+               remat: bool = True,
+               remat_mode: str = "layer",   # layer | nested
+               cache_len: Optional[int] = None,
+               unroll: int = 1,
+               ) -> Tuple[Array, Optional[List], Dict[str, Array]]:
+    """Run x through every segment. Returns (x, new_caches, summed aux).
+
+    cross_kvs mirrors the plan: per (segment, position) stacked cross-KV for
+    decode of cross/has_cross blocks (None elsewhere). remat_mode='nested'
+    checkpoints at two levels (O(sqrt(L)) live boundaries — the deep-model
+    memory knob for 88/100-layer training cells).
+    """
+    aux_tot = _zero_aux()
+    new_caches: List = []
+
+    for si, seg in enumerate(plan):
+        seg_params = params[si]
+        seg_cache = caches[si] if caches is not None else tuple(
+            None for _ in seg.pattern)
+        seg_xkv = cross_kvs[si] if cross_kvs is not None else tuple(
+            None for _ in seg.pattern)
+
+        def body(carry, xs):
+            h, aux_c = carry
+            layer_params, layer_cache, layer_xkv = xs
+            new_lc = []
+            for j, bc in enumerate(seg.pattern):
+                h, c, aux = block_apply(
+                    bc, cfg, layer_params[j], h, mode=mode,
+                    cache=layer_cache[j], index=index,
+                    cross_src=cross_src, cross_kv=layer_xkv[j],
+                    positions=positions, use_flash=use_flash,
+                    use_rwkv_kernel=use_rwkv_kernel, cache_len=cache_len)
+                # train mode never materializes stacked caches/states
+                new_lc.append(None if mode == "train" else c)
+                aux_c = {k: aux_c[k] + aux[k] for k in AUX_KEYS}
+            return (h, aux_c), tuple(new_lc)
+
+        if remat and mode == "train":
+            body = jax.checkpoint(body)
+
+        xs = (seg_params, seg_cache, seg_xkv)
+        G = (_nested_group(seg.n)
+             if remat_mode == "nested" and mode == "train" and remat else 1)
+        if G > 1:
+            grouped = jax.tree.map(
+                lambda a: a.reshape(seg.n // G, G, *a.shape[1:]), xs)
+
+            def group_body(carry, gxs):
+                return jax.lax.scan(body, carry, gxs,
+                                    unroll=min(unroll, G))
+
+            (x, aux_tot), seg_new_cache = jax.lax.scan(
+                jax.checkpoint(group_body), (x, aux_tot), grouped)
+            seg_new_cache = jax.tree.map(
+                lambda a: a.reshape(seg.n, *a.shape[2:]), seg_new_cache)
+        else:
+            (x, aux_tot), seg_new_cache = jax.lax.scan(
+                body, (x, aux_tot), xs, unroll=min(unroll, seg.n))
+        new_caches.append(seg_new_cache)
+
+    return x, (new_caches if caches is not None or mode == "prefill" else None), aux_tot

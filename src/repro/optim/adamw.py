@@ -1,0 +1,79 @@
+"""AdamW with mixed precision: bf16 params, f32 master + moments.
+
+State layout (pytree mirroring params):
+    m, v     — f32 first/second moments
+    master   — f32 master copy (only when params are low-precision)
+    step     — i32 scalar
+
+Sharding: moments/master inherit each param's PartitionSpec; the launcher
+additionally applies ZeRO-1-style sharding of optimizer state over the
+'data' axis (see launch/shardings.zero1_specs).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .clip import clip_by_global_norm
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+    master: Any        # f32 copy, or None-like empty tuple when fp32 params
+    step: jax.Array
+
+
+def _needs_master(params) -> bool:
+    return any(x.dtype != jnp.float32 for x in jax.tree.leaves(params))
+
+
+def adamw_init(params) -> AdamWState:
+    f32 = lambda x: jnp.zeros(x.shape, jnp.float32)  # noqa: E731
+    m = jax.tree.map(f32, params)
+    v = jax.tree.map(f32, params)
+    master = (jax.tree.map(lambda x: x.astype(jnp.float32), params)
+              if _needs_master(params) else None)
+    return AdamWState(m=m, v=v, master=master, step=jnp.int32(0))
+
+
+def adamw_update(grads, state: AdamWState, params, *,
+                 lr: jax.Array | float,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1,
+                 max_grad_norm: Optional[float] = 1.0,
+                 ) -> Tuple[Any, AdamWState, dict]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    gnorm = jnp.float32(0.0)
+    if max_grad_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    # NOTE: separate tree.maps instead of one multi-output map — parameter
+    # trees contain *structural* tuples (segment patterns), so tuple leaves
+    # would be ambiguous; XLA CSEs the shared subexpressions inside jit.
+    masters = state.master if state.master is not None else jax.tree.map(
+        lambda p: p.astype(jnp.float32), params)
+    m = jax.tree.map(
+        lambda g, m_: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+        grads, state.m)
+    v = jax.tree.map(
+        lambda g, v_: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        grads, state.v)
+    new_master = jax.tree.map(
+        lambda m_, v_, pm: pm - lr * ((m_ / c1) / (jnp.sqrt(v_ / c2) + eps)
+                                      + weight_decay * pm),
+        m, v, masters)
+    new_params = jax.tree.map(lambda nm, p: nm.astype(p.dtype), new_master,
+                              params)
+    new_state = AdamWState(
+        m=m, v=v,
+        master=new_master if state.master is not None else None,
+        step=step)
+    metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+    return new_params, new_state, metrics

@@ -1,0 +1,53 @@
+"""LR schedules: cosine (default) and WSD (minicpm's warmup-stable-decay)."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(base_lr: float, total_steps: int, warmup_steps: int = 100,
+                  final_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+        t = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, base_lr * cos)
+
+    return lr
+
+
+def wsd(base_lr: float, total_steps: int, warmup_steps: int = 100,
+        decay_frac: float = 0.1, final_frac: float = 0.01) -> Callable:
+    """Warmup-Stable-Decay (MiniCPM): linear warmup, long flat stage, short
+    exponential-ish (here linear-in-log) decay over the last decay_frac."""
+    decay_start = int(total_steps * (1 - decay_frac))
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+        t = (step - decay_start) / jnp.maximum(total_steps - decay_start, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        decay = base_lr * jnp.exp(jnp.log(final_frac) * t)
+        out = jnp.where(step < warmup_steps, warm,
+                        jnp.where(step < decay_start, base_lr, decay))
+        return out
+
+    return lr
+
+
+def constant(base_lr: float) -> Callable:
+    return lambda step: jnp.float32(base_lr)
+
+
+def make_schedule(kind: str, base_lr: float, total_steps: int,
+                  warmup_steps: int = 100) -> Callable:
+    if kind == "cosine":
+        return warmup_cosine(base_lr, total_steps, warmup_steps)
+    if kind == "wsd":
+        return wsd(base_lr, total_steps, warmup_steps)
+    if kind == "constant":
+        return constant(base_lr)
+    raise ValueError(f"unknown schedule {kind!r}")

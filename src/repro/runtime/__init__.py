@@ -1,0 +1,6 @@
+from .fault import FailureInjector, retry
+from .elastic import grow_islands, shrink_islands
+from .straggler import StragglerMonitor
+
+__all__ = ["FailureInjector", "retry", "grow_islands", "shrink_islands",
+           "StragglerMonitor"]

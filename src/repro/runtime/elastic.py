@@ -1,0 +1,52 @@
+"""Elastic island scaling — volunteers joining and leaving mid-experiment.
+
+NodIO's defining property: anyone clicking the URL adds an island; closing
+the tab removes one. Here that is a *reshape of the island batch*:
+
+* grow: new islands are initialized fresh and immediately seeded with a
+  pool GET (exactly how a joining browser bootstraps from the server).
+* shrink: islands simply vanish; their last PUT lives on in the pool, so
+  their progress is not entirely lost (the paper's pool-as-persistence).
+
+Both operations are pure host-side tree surgery — they compose with
+checkpoint.restore for restart-time elasticity (restore a 64-island
+checkpoint into a 256-island run, or vice versa).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import island as island_lib
+from repro.core import pool as pool_lib
+from repro.core.problems import Problem
+from repro.core.types import EAConfig, IslandState, PoolState
+
+
+def shrink_islands(islands: IslandState, keep: int) -> IslandState:
+    """Drop islands beyond ``keep`` (tab closed). Keeps the first ``keep``."""
+    n = int(islands.pop.shape[0])
+    if keep > n:
+        raise ValueError(f"shrink to {keep} > current {n}")
+    return jax.tree.map(lambda x: x[:keep], islands)
+
+
+def grow_islands(islands: IslandState, n_new: int, problem: Problem,
+                 cfg: EAConfig, pool: Optional[PoolState],
+                 rng: jax.Array) -> IslandState:
+    """Add ``n_new`` fresh islands, seeded from the pool when available."""
+    n_old = int(islands.pop.shape[0])
+    k_init, k_get = jax.random.split(rng)
+    keys = jax.random.split(k_init, n_new)
+    uuids = jnp.arange(n_old, n_old + n_new, dtype=jnp.int32)
+    fresh = jax.vmap(
+        lambda k, u: island_lib.init_island(k, problem, cfg, u))(keys, uuids)
+    if pool is not None:
+        gets = jax.vmap(lambda k: pool_lib.pool_get_random(pool, k))(
+            jax.random.split(k_get, n_new))
+        fresh = jax.vmap(island_lib.receive_immigrant)(fresh, *gets)
+    return jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                        islands, fresh)

@@ -1,0 +1,103 @@
+"""Host PoolServer: REST semantics, thread safety, failure injection."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.async_pool import PoolClient, PoolServer, PoolUnavailable
+
+
+class TestPoolServer:
+    def test_put_get_roundtrip(self):
+        s = PoolServer()
+        s.put(np.ones(4), 2.0, uuid=7)
+        g, f = s.get_random()
+        assert f == 2.0
+        np.testing.assert_array_equal(g, np.ones(4))
+
+    def test_get_empty_raises(self):
+        s = PoolServer()
+        with pytest.raises(PoolUnavailable):
+            s.get_random()
+
+    def test_best_tracking(self):
+        s = PoolServer()
+        s.put(np.zeros(2), 1.0)
+        s.put(np.ones(2), 5.0)
+        s.put(np.zeros(2), 3.0)
+        _, f = s.get_best()
+        assert f == 5.0
+
+    def test_capacity_ring(self):
+        s = PoolServer(capacity=3)
+        for i in range(10):
+            s.put(np.array([i]), float(i))
+        assert s.stats()["size"] == 3
+
+    def test_reset_bumps_experiment(self):
+        s = PoolServer()
+        s.put(np.zeros(2), 1.0)
+        assert s.reset() == 1
+        assert s.stats()["size"] == 0
+        with pytest.raises(PoolUnavailable):
+            s.get_random()
+
+    def test_kill_revive(self):
+        s = PoolServer()
+        s.put(np.zeros(2), 1.0)
+        s.kill()
+        with pytest.raises(PoolUnavailable):
+            s.put(np.zeros(2), 2.0)
+        with pytest.raises(PoolUnavailable):
+            s.get_random()
+        s.revive()
+        g, f = s.get_random()
+        assert f == 1.0  # state survived the outage
+
+    def test_journal(self, tmp_path):
+        path = tmp_path / "journal.jsonl"
+        s = PoolServer(journal_path=str(path))
+        s.put(np.zeros(2), 1.0, uuid=3)
+        s.get_random()
+        s.reset()
+        s.close()
+        lines = path.read_text().strip().splitlines()
+        assert len(lines) == 3
+
+    def test_thread_safety(self):
+        s = PoolServer(capacity=128)
+        errors = []
+
+        def worker(uid):
+            try:
+                for i in range(200):
+                    s.put(np.array([uid, i]), float(i), uuid=uid)
+                    s.get_random()
+            except PoolUnavailable:
+                pass
+            except Exception as e:  # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=worker, args=(u,)) for u in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        st = s.stats()
+        assert st["puts"] == 8 * 200
+        assert st["size"] == 128
+
+
+class TestPoolClient:
+    def test_client_swallows_failures(self):
+        s = PoolServer()
+        c = PoolClient(s, uuid=1)
+        s.kill()
+        assert c.put(np.zeros(2), 1.0) is False
+        assert c.get_random() is None
+        assert c.lost_puts == 1 and c.lost_gets == 1
+        s.revive()
+        assert c.put(np.zeros(2), 1.0) is True
+        got = c.get_random()
+        assert got is not None and got[1] == 1.0

@@ -1,0 +1,144 @@
+"""Data pipeline determinism + checkpoint round-trips + elastic restore."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer, latest_step, restore, save
+from repro.data import ShardedLoader, SyntheticLM
+
+
+class TestSyntheticLM:
+    def test_deterministic(self):
+        d = SyntheticLM(vocab_size=100, seq_len=32, global_batch=8, seed=1)
+        a = d.batch_for_step(5)
+        b = d.batch_for_step(5)
+        np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                      np.asarray(b["tokens"]))
+
+    def test_steps_differ(self):
+        d = SyntheticLM(vocab_size=100, seq_len=32, global_batch=8)
+        a = d.batch_for_step(1)["tokens"]
+        b = d.batch_for_step(2)["tokens"]
+        assert not np.array_equal(np.asarray(a), np.asarray(b))
+
+    def test_shards_partition(self):
+        d = SyntheticLM(vocab_size=100, seq_len=16, global_batch=8)
+        s0 = d.batch_for_step(0, shard=0, n_shards=2)
+        s1 = d.batch_for_step(0, shard=1, n_shards=2)
+        assert s0["tokens"].shape == (4, 16)
+        assert not np.array_equal(np.asarray(s0["tokens"]),
+                                  np.asarray(s1["tokens"]))
+
+    def test_labels_are_shifted_tokens(self):
+        d = SyntheticLM(vocab_size=50, seq_len=16, global_batch=2)
+        b = d.batch_for_step(0)
+        np.testing.assert_array_equal(np.asarray(b["labels"][:, :-1]),
+                                      np.asarray(b["tokens"][:, 1:]))
+
+    def test_structure_is_learnable(self):
+        """Conditional structure: next token is a deterministic function of
+        the current one ~85% of the time -> bigram entropy far below
+        uniform."""
+        d = SyntheticLM(vocab_size=64, seq_len=256, global_batch=16,
+                        noise=0.1, n_regimes=1)
+        b = d.batch_for_step(0)
+        toks = np.asarray(b["tokens"])
+        # within one sequence+regime, count exact affine-follow fraction
+        matches = 0
+        total = 0
+        for row in toks:
+            diffs = {}
+            for t in range(len(row) - 1):
+                # affine map is fixed per (seq, regime): x->(a x + b) % V
+                pass
+            # fallback statistical check: repeated (x_t -> x_{t+1}) pairs
+            from collections import Counter, defaultdict
+            nxt = defaultdict(Counter)
+            for t in range(len(row) - 1):
+                nxt[row[t]][row[t + 1]] += 1
+            for x, c in nxt.items():
+                if sum(c.values()) >= 2:
+                    matches += c.most_common(1)[0][1]
+                    total += sum(c.values())
+        assert total > 0 and matches / total > 0.6
+
+
+class TestLoader:
+    def test_resume_exact(self):
+        d = SyntheticLM(vocab_size=100, seq_len=16, global_batch=4)
+        l1 = ShardedLoader(d)
+        seen = [l1.next() for _ in range(5)]
+        sd = l1.state_dict()
+        l2 = ShardedLoader(d)
+        l2.load_state_dict(sd)
+        nxt_a = l1.next()
+        nxt_b = l2.next()
+        np.testing.assert_array_equal(np.asarray(nxt_a["tokens"]),
+                                      np.asarray(nxt_b["tokens"]))
+
+    def test_prefetch_matches_sync(self):
+        d = SyntheticLM(vocab_size=100, seq_len=16, global_batch=4)
+        sync = ShardedLoader(d)
+        pre = ShardedLoader(d).start()
+        try:
+            for _ in range(4):
+                a = sync.next()
+                b = pre.next()
+                np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                              np.asarray(b["tokens"]))
+        finally:
+            pre.stop()
+
+
+class TestCheckpoint:
+    def _tree(self):
+        return {"params": {"w": jnp.arange(6.0).reshape(2, 3),
+                           "b": jnp.ones((3,), jnp.bfloat16)},
+                "step": jnp.int32(7),
+                "tuplepart": (jnp.zeros((2,)), jnp.ones((2,)))}
+
+    def test_roundtrip(self, tmp_path):
+        t = self._tree()
+        save(str(tmp_path), 10, t)
+        got = restore(str(tmp_path), target=t)
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+            # cast: numpy ufuncs can't compare ml_dtypes bfloat16 directly
+            np.testing.assert_array_equal(
+                np.asarray(a, dtype=np.float64),
+                np.asarray(b, dtype=np.float64))
+        assert got["params"]["b"].dtype == np.asarray(t["params"]["b"]).dtype
+
+    def test_latest_and_keep(self, tmp_path):
+        t = self._tree()
+        for s in (1, 2, 3, 4):
+            save(str(tmp_path), s, t, keep=2)
+        assert latest_step(str(tmp_path)) == 4
+        assert restore(str(tmp_path), step=3, target=t) is not None
+        with pytest.raises(FileNotFoundError):
+            restore(str(tmp_path), step=1, target=t)
+
+    def test_restore_missing_raises(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            restore(str(tmp_path / "nope"))
+
+    def test_structure_mismatch_detected(self, tmp_path):
+        save(str(tmp_path), 1, {"a": jnp.zeros(2)})
+        with pytest.raises(ValueError, match="mismatch"):
+            restore(str(tmp_path), target={"b": jnp.zeros(2)})
+
+    def test_async_checkpointer(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), keep=2)
+        t = self._tree()
+        for s in (5, 10):
+            ck.save_async(s, t)
+        ck.wait()
+        assert latest_step(str(tmp_path)) == 10
+        got = ck.restore_latest(target=t)
+        np.testing.assert_array_equal(np.asarray(got["step"]), 7)
+
+    def test_atomicity_no_tmp_left(self, tmp_path):
+        save(str(tmp_path), 3, self._tree())
+        assert not [p for p in os.listdir(tmp_path) if p.endswith(".tmp")]

@@ -1,0 +1,138 @@
+"""Unit + property tests for the vectorized GA operators."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ga
+from repro.core.types import EAConfig, GenomeSpec
+
+BIN = GenomeSpec("binary", 32)
+FLT = GenomeSpec("float", 16, -5.0, 5.0)
+
+
+def _pop(rng, n=32, spec=BIN):
+    if spec.kind == "binary":
+        return jax.random.bernoulli(rng, 0.5, (n, spec.length)).astype(jnp.int8)
+    return jax.random.uniform(rng, (n, spec.length), jnp.float32, spec.low, spec.high)
+
+
+class TestMask:
+    def test_padded_lanes_are_neg_inf(self):
+        f = jnp.arange(8.0)
+        m = ga.mask_fitness(f, jnp.int32(5))
+        assert np.isneginf(np.asarray(m[5:])).all()
+        np.testing.assert_array_equal(np.asarray(m[:5]), np.arange(5.0))
+
+
+class TestSelection:
+    def test_tournament_never_selects_padded(self):
+        f = ga.mask_fitness(jnp.arange(16.0), jnp.int32(6))
+        idx = ga.tournament_select(jax.random.key(0), f, jnp.int32(6), 500, k=2)
+        assert int(idx.max()) < 6
+
+    def test_tournament_prefers_fitter(self):
+        f = jnp.array([0.0, 100.0, 0.0, 0.0])
+        idx = ga.tournament_select(jax.random.key(1), f, jnp.int32(4), 2000, k=2)
+        frac = float((idx == 1).mean())
+        assert frac > 0.35  # >25% (uniform) because tournaments prefer it
+
+    def test_roulette_distribution(self):
+        f = jnp.array([1.0, 2.0, 4.0, -jnp.inf])
+        idx = ga.roulette_select(jax.random.key(2), f, jnp.int32(3), 4000)
+        assert int(idx.max()) < 3
+        counts = np.bincount(np.asarray(idx), minlength=4)
+        assert counts[2] > counts[0]
+
+
+class TestCrossover:
+    def test_two_point_genes_from_parents(self):
+        pa = jnp.zeros((64, 32), jnp.int8)
+        pb = jnp.ones((64, 32), jnp.int8)
+        kids = ga.two_point_crossover(jax.random.key(0), pa, pb)
+        assert set(np.unique(np.asarray(kids))) <= {0, 1}
+
+    def test_two_point_is_contiguous_segment(self):
+        pa = jnp.zeros((256, 32), jnp.int8)
+        pb = jnp.ones((256, 32), jnp.int8)
+        kids = np.asarray(ga.two_point_crossover(jax.random.key(1), pa, pb))
+        # each row must be 0^a 1^b 0^c (at most two transitions)
+        trans = (np.diff(kids, axis=1) != 0).sum(axis=1)
+        assert (trans <= 2).all()
+
+    def test_uniform_mixes(self):
+        pa = jnp.zeros((64, 32), jnp.int8)
+        pb = jnp.ones((64, 32), jnp.int8)
+        kids = ga.uniform_crossover(jax.random.key(0), pa, pb)
+        frac = float(kids.astype(jnp.float32).mean())
+        assert 0.4 < frac < 0.6
+
+    def test_blend_within_extended_range(self):
+        pa = jnp.full((32, 16), -1.0)
+        pb = jnp.full((32, 16), 1.0)
+        kids = ga.blend_crossover(jax.random.key(0), pa, pb, alpha=0.5)
+        assert float(kids.min()) >= -2.0 and float(kids.max()) <= 2.0
+
+
+class TestMutation:
+    def test_binary_stays_binary(self):
+        cfg = EAConfig(mutation_rate=0.5)
+        pop = _pop(jax.random.key(0))
+        out = ga.mutate(jax.random.key(1), pop, cfg, BIN)
+        assert set(np.unique(np.asarray(out))) <= {0, 1}
+        assert out.dtype == pop.dtype
+
+    def test_rate_zero_is_identity(self):
+        cfg = EAConfig(mutation_rate=0.0)
+        pop = _pop(jax.random.key(0))
+        out = ga.mutate(jax.random.key(1), pop, cfg, BIN)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(pop))
+
+    def test_float_clipped_to_bounds(self):
+        cfg = EAConfig(mutation_rate=1.0, mutation_sigma=100.0)
+        pop = _pop(jax.random.key(0), spec=FLT)
+        out = ga.mutate(jax.random.key(1), pop, cfg, FLT)
+        assert float(out.min()) >= FLT.low and float(out.max()) <= FLT.high
+
+
+class TestNextGeneration:
+    def test_elitism_preserves_best(self):
+        cfg = EAConfig(max_pop=32, elite=2, mutation_rate=0.5)
+        pop = _pop(jax.random.key(0), 32)
+        fit = pop.astype(jnp.float32).sum(-1)  # onemax
+        new = ga.next_generation(jax.random.key(1), pop, fit,
+                                 jnp.int32(32), cfg, BIN)
+        best = np.asarray(pop[int(jnp.argmax(fit))])
+        np.testing.assert_array_equal(np.asarray(new[0]), best)
+
+    def test_output_shape_static(self):
+        cfg = EAConfig(max_pop=32, elite=2)
+        pop = _pop(jax.random.key(0), 32)
+        fit = pop.astype(jnp.float32).sum(-1)
+        for ps in [8, 20, 32]:
+            new = ga.next_generation(jax.random.key(1), pop, fit,
+                                     jnp.int32(ps), cfg, BIN)
+            assert new.shape == pop.shape
+
+
+@settings(max_examples=20, deadline=None)
+@given(pop_size=st.integers(4, 32), seed=st.integers(0, 2**30))
+def test_property_selection_respects_pop_size(pop_size, seed):
+    """Hypothesis: for any effective pop size, selection indices < pop_size."""
+    f = jax.random.normal(jax.random.key(seed), (32,))
+    f = ga.mask_fitness(f, jnp.int32(pop_size))
+    idx = ga.tournament_select(jax.random.key(seed + 1), f,
+                               jnp.int32(pop_size), 64, k=3)
+    assert int(idx.max()) < pop_size
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**30), rate=st.floats(0.0, 1.0))
+def test_property_binary_mutation_flip_rate(seed, rate):
+    """Observed flip fraction tracks the configured rate."""
+    cfg = EAConfig(mutation_rate=rate)
+    pop = jnp.zeros((64, 64), jnp.int8)
+    out = ga.mutate(jax.random.key(seed), pop, cfg, GenomeSpec("binary", 64))
+    frac = float(out.astype(jnp.float32).mean())
+    assert abs(frac - rate) < 0.12

@@ -1,0 +1,195 @@
+"""Island lifecycle + device pool semantics (PUT/GET, ring buffer, masks)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import island as island_lib
+from repro.core import pool as pool_lib
+from repro.core.problems import make_onemax, make_trap
+from repro.core.types import EAConfig, GenomeSpec, MigrationConfig
+
+CFG = EAConfig(max_pop=32, min_pop=16, generations_per_epoch=5,
+               mutation_rate=0.05)
+
+
+class TestIsland:
+    def test_init_masks_padded_lanes(self):
+        p = make_onemax(16)
+        s = island_lib.init_island(jax.random.key(0), p, CFG, pop_size=20)
+        assert np.isneginf(np.asarray(s.fitness[20:])).all()
+        assert np.isfinite(np.asarray(s.fitness[:20])).all()
+
+    def test_w2_pop_sizes_heterogeneous(self):
+        p = make_onemax(16)
+        batch = island_lib.init_islands(jax.random.key(0), 32, p, CFG)
+        sizes = np.asarray(batch.pop_size)
+        assert sizes.min() >= CFG.min_pop and sizes.max() <= CFG.max_pop
+        assert len(np.unique(sizes)) > 3  # actually heterogeneous
+
+    def test_epoch_improves_or_holds_best(self):
+        p = make_onemax(32)
+        s = island_lib.init_island(jax.random.key(1), p, CFG)
+        before = float(s.best_fitness)
+        s2 = island_lib.island_epoch(s, p, CFG)
+        assert float(s2.best_fitness) >= before
+        assert int(s2.generation) == CFG.generations_per_epoch
+
+    def test_evaluations_charged_per_generation(self):
+        p = make_onemax(64)
+        s = island_lib.init_island(jax.random.key(2), p, CFG, pop_size=20)
+        s2 = island_lib.island_epoch(s, p, CFG)
+        # init eval + gens * pop_size (unless early done on 64-bit onemax: unlikely in 5 gens)
+        assert int(s2.evaluations) == 20 + CFG.generations_per_epoch * 20
+
+    def test_done_island_frozen(self):
+        p = make_onemax(8)  # trivially solvable
+        cfg = EAConfig(max_pop=64, min_pop=64, generations_per_epoch=50)
+        s = island_lib.init_island(jax.random.key(3), p, cfg)
+        s = island_lib.island_epoch(s, p, cfg)
+        assert bool(s.done)
+        evals = int(s.evaluations)
+        s2 = island_lib.island_epoch(s, p, cfg)
+        assert int(s2.evaluations) == evals  # no phantom work after done
+        assert int(s2.generation) == int(s.generation)
+
+    def test_restart_island_resets_and_counts(self):
+        p = make_onemax(8)
+        cfg = EAConfig(max_pop=32, min_pop=16, generations_per_epoch=50)
+        s = island_lib.init_island(jax.random.key(4), p, cfg)
+        s = island_lib.island_epoch(s, p, cfg)
+        assert bool(s.done)
+        r = island_lib.restart_island(s, p, cfg)
+        assert int(r.experiments) == 1
+        assert int(r.generation) == 0
+        assert int(r.uuid) == int(s.uuid)
+        assert int(r.evaluations) > int(s.evaluations)  # fresh pop charged
+
+    def test_restart_noop_when_not_done(self):
+        p = make_trap(n_traps=8, l=4)
+        s = island_lib.init_island(jax.random.key(5), p, CFG)
+        r = island_lib.restart_island(s, p, CFG)
+        np.testing.assert_array_equal(np.asarray(r.pop), np.asarray(s.pop))
+        assert int(r.experiments) == 0
+
+    def test_receive_immigrant_replaces_worst(self):
+        p = make_onemax(16)
+        s = island_lib.init_island(jax.random.key(6), p, CFG, pop_size=24)
+        imm = jnp.ones((16,), jnp.int8)
+        s2 = island_lib.receive_immigrant(s, imm, jnp.float32(16.0))
+        assert float(s2.best_fitness) == 16.0
+        # worst valid lane got replaced
+        assert float(s2.fitness.max()) == 16.0
+
+    def test_receive_immigrant_neg_inf_is_noop(self):
+        """Dead server: -inf immigrant leaves the island untouched."""
+        p = make_onemax(16)
+        s = island_lib.init_island(jax.random.key(7), p, CFG)
+        s2 = island_lib.receive_immigrant(
+            s, jnp.zeros((16,), jnp.int8), jnp.float32(-jnp.inf))
+        np.testing.assert_array_equal(np.asarray(s2.pop), np.asarray(s.pop))
+        assert float(s2.best_fitness) == float(s.best_fitness)
+
+
+class TestPool:
+    GEN = GenomeSpec("binary", 8)
+
+    def _mk(self, cap=4):
+        return pool_lib.pool_init(cap, self.GEN)
+
+    def test_empty_get_is_neg_inf(self):
+        pool = self._mk()
+        g, f = pool_lib.pool_get_random(pool, jax.random.key(0))
+        assert np.isneginf(float(f))
+
+    def test_put_get_roundtrip(self):
+        pool = self._mk()
+        g = jnp.ones((1, 8), jnp.int8)
+        pool = pool_lib.pool_put_batch(pool, g, jnp.array([3.0]))
+        got, f = pool_lib.pool_get_random(pool, jax.random.key(0))
+        assert float(f) == 3.0
+        np.testing.assert_array_equal(np.asarray(got), np.ones(8))
+
+    def test_ring_overwrite(self):
+        pool = self._mk(cap=2)
+        for i in range(5):
+            pool = pool_lib.pool_put_batch(
+                pool, jnp.full((1, 8), i, jnp.int8), jnp.array([float(i)]))
+        assert int(pool.count) == 2
+        fits = set(np.asarray(pool.fitness).tolist())
+        assert fits == {3.0, 4.0}  # two most recent
+
+    def test_batch_larger_than_capacity_keeps_best(self):
+        pool = self._mk(cap=2)
+        g = jnp.arange(6, dtype=jnp.int8)[:, None] * jnp.ones((6, 8), jnp.int8)
+        f = jnp.array([5.0, 1.0, 9.0, 2.0, 7.0, 0.0])
+        pool = pool_lib.pool_put_batch(pool, g, f)
+        fits = sorted(np.asarray(pool.fitness).tolist())
+        assert fits == [7.0, 9.0]
+
+    def test_valid_mask_skips_entries(self):
+        pool = self._mk(cap=4)
+        g = jnp.ones((3, 8), jnp.int8)
+        f = jnp.array([1.0, 2.0, 3.0])
+        pool = pool_lib.pool_put_batch(pool, g, f,
+                                       valid=jnp.array([True, False, True]))
+        assert int(pool.count) == 2
+        kept = sorted(x for x in np.asarray(pool.fitness).tolist()
+                      if np.isfinite(x))
+        assert kept == [1.0, 3.0]
+
+    def test_pool_reset(self):
+        pool = self._mk()
+        pool = pool_lib.pool_put_batch(pool, jnp.ones((1, 8), jnp.int8),
+                                       jnp.array([1.0]))
+        pool = pool_lib.pool_reset(pool)
+        assert int(pool.count) == 0
+        g, f = pool_lib.pool_get_random(pool, jax.random.key(0))
+        assert np.isneginf(float(f))
+
+    def test_migrate_batch_dead_server(self):
+        pool = self._mk()
+        bests = jnp.ones((4, 8), jnp.int8)
+        fits = jnp.arange(4.0)
+        new_pool, img, imf = pool_lib.migrate_batch(
+            pool, bests, fits, jax.random.key(0), available=False)
+        assert int(new_pool.count) == 0          # PUT lost
+        assert np.isneginf(np.asarray(imf)).all()  # GET lost
+
+    def test_migrate_batch_alive(self):
+        pool = self._mk(cap=8)
+        bests = jnp.ones((4, 8), jnp.int8)
+        fits = jnp.arange(4.0)
+        new_pool, img, imf = pool_lib.migrate_batch(
+            pool, bests, fits, jax.random.key(0), available=True)
+        assert int(new_pool.count) == 4
+        assert np.isfinite(np.asarray(imf)).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**30), cap=st.integers(1, 16),
+       n=st.integers(1, 24))
+def test_property_pool_count_saturates(seed, cap, n):
+    """count <= capacity always; count == min(total valid puts, cap)."""
+    gen = GenomeSpec("float", 4)
+    pool = pool_lib.pool_init(cap, gen)
+    g = jax.random.normal(jax.random.key(seed), (n, 4))
+    f = jax.random.normal(jax.random.key(seed + 1), (n,))
+    pool = pool_lib.pool_put_batch(pool, g, f)
+    assert int(pool.count) == min(n, cap)
+    assert int((jnp.isfinite(pool.fitness)).sum()) == min(n, cap)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**30))
+def test_property_get_uniform_support(seed):
+    """Every pool member is reachable by GET (uniform support)."""
+    gen = GenomeSpec("float", 2)
+    pool = pool_lib.pool_init(4, gen)
+    g = jnp.arange(8, dtype=jnp.float32).reshape(4, 2)
+    f = jnp.arange(4, dtype=jnp.float32)
+    pool = pool_lib.pool_put_batch(pool, g, f)
+    keys = jax.random.split(jax.random.key(seed), 200)
+    _, fits = jax.vmap(lambda k: pool_lib.pool_get_random(pool, k))(keys)
+    assert set(np.unique(np.asarray(fits)).tolist()) == {0.0, 1.0, 2.0, 3.0}

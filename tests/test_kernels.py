@@ -1,0 +1,176 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret on CPU) vs jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.problems import make_f15_consts
+from repro.kernels.trap import ops as trap_ops, ref as trap_ref
+from repro.kernels.rastrigin import ops as f15_ops, ref as f15_ref
+from repro.kernels.rwkv6 import ops as rwkv_ops, ref as rwkv_ref
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+
+CONSTS = {"a": 1.0, "b": 2.0, "z": 3.0, "l": 4}
+
+
+class TestTrapKernel:
+    @pytest.mark.parametrize("n,n_traps,l", [
+        (32, 40, 4),      # paper config
+        (256, 10, 4),
+        (100, 8, 8),      # non-multiple of block
+        (513, 5, 3),
+        (1, 4, 4),
+    ])
+    def test_matches_ref(self, n, n_traps, l):
+        consts = dict(CONSTS, l=l, z=float(l - 1))
+        pop = jax.random.bernoulli(jax.random.key(n + l), 0.5,
+                                   (n, n_traps * l)).astype(jnp.int8)
+        got = trap_ops.trap_fitness(consts, pop, n_traps=n_traps)
+        want = trap_ref.trap_fitness(pop, n_traps=n_traps, l=l, a=1.0,
+                                     b=2.0, z=float(l - 1))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6)
+
+    def test_extremes(self):
+        ones = jnp.ones((4, 160), jnp.int8)
+        zeros = jnp.zeros((4, 160), jnp.int8)
+        np.testing.assert_allclose(
+            np.asarray(trap_ops.trap_fitness(CONSTS, ones, n_traps=40)), 80.0)
+        np.testing.assert_allclose(
+            np.asarray(trap_ops.trap_fitness(CONSTS, zeros, n_traps=40)), 40.0)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**30), n=st.integers(1, 300))
+    def test_property_random_pops(self, seed, n):
+        pop = jax.random.bernoulli(jax.random.key(seed), 0.5,
+                                   (n, 160)).astype(jnp.int8)
+        got = trap_ops.trap_fitness(CONSTS, pop, n_traps=40)
+        want = trap_ref.trap_fitness(pop, n_traps=40, l=4, a=1.0, b=2.0,
+                                     z=3.0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6)
+
+
+class TestF15Kernel:
+    @pytest.mark.parametrize("dim,group,n", [
+        (1000, 50, 32),   # paper benchmark dims
+        (200, 20, 64),
+        (100, 10, 100),   # non-multiple of block
+        (64, 8, 1),
+    ])
+    def test_matches_ref(self, dim, group, n):
+        consts = make_f15_consts(jax.random.key(dim + n), dim, group)
+        pop = jax.random.uniform(jax.random.key(n), (n, dim), jnp.float32,
+                                 -5, 5)
+        got = f15_ops.f15(consts, pop)
+        want = f15_ref.f15(consts, pop)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-5, atol=2e-2)
+
+    def test_optimum_is_zero(self):
+        consts = make_f15_consts(jax.random.key(0), 200, 20)
+        got = f15_ops.f15(consts, consts["o"][None, :])
+        np.testing.assert_allclose(np.asarray(got), 0.0, atol=1e-3)
+
+    def test_shared_rotation_variant(self):
+        consts = make_f15_consts(jax.random.key(1), 100, 10,
+                                 shared_rotation=True)
+        pop = jax.random.uniform(jax.random.key(2), (16, 100), jnp.float32,
+                                 -5, 5)
+        np.testing.assert_allclose(np.asarray(f15_ops.f15(consts, pop)),
+                                   np.asarray(f15_ref.f15(consts, pop)),
+                                   rtol=3e-5, atol=2e-2)
+
+
+class TestRWKV6Kernel:
+    @pytest.mark.parametrize("B,S,H,hd,chunk", [
+        (2, 64, 3, 16, 32),
+        (1, 128, 2, 64, 32),   # model head size
+        (2, 37, 1, 8, 32),     # padding path
+        (1, 32, 4, 32, 8),     # small chunks
+    ])
+    def test_matches_ref(self, B, S, H, hd, chunk):
+        ks = jax.random.split(jax.random.key(B * S + hd), 6)
+        r = jax.random.normal(ks[0], (B, S, H, hd))
+        k = jax.random.normal(ks[1], (B, S, H, hd))
+        v = jax.random.normal(ks[2], (B, S, H, hd))
+        x = jax.random.uniform(ks[3], (B, S, H, hd), minval=-4.0, maxval=1.0)
+        w = jnp.exp(-jnp.exp(x))   # realistic rwkv decay range
+        u = jax.random.normal(ks[4], (H, hd)) * 0.5
+        s0 = jax.random.normal(ks[5], (B, H, hd, hd)) * 0.1
+        y1, st1 = rwkv_ops.wkv(r, k, v, w, u, s0, chunk=chunk)
+        y2, st2 = rwkv_ref.wkv(r, k, v, w, u, s0)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   atol=1e-3, rtol=2e-3)
+        np.testing.assert_allclose(np.asarray(st1), np.asarray(st2),
+                                   atol=1e-3, rtol=2e-3)
+
+    def test_state_carry_composes(self):
+        """wkv(AB) == wkv(B) after wkv(A) — chunk boundary correctness."""
+        B, S, H, hd = 1, 64, 2, 16
+        ks = jax.random.split(jax.random.key(7), 5)
+        r = jax.random.normal(ks[0], (B, S, H, hd))
+        k = jax.random.normal(ks[1], (B, S, H, hd))
+        v = jax.random.normal(ks[2], (B, S, H, hd))
+        w = jnp.exp(-jnp.exp(jax.random.uniform(ks[3], (B, S, H, hd),
+                                                minval=-3, maxval=0.5)))
+        u = jax.random.normal(ks[4], (H, hd)) * 0.5
+        s0 = jnp.zeros((B, H, hd, hd))
+        y_all, st_all = rwkv_ops.wkv(r, k, v, w, u, s0)
+        half = S // 2
+        y1, st1 = rwkv_ops.wkv(r[:, :half], k[:, :half], v[:, :half],
+                               w[:, :half], u, s0)
+        y2, st2 = rwkv_ops.wkv(r[:, half:], k[:, half:], v[:, half:],
+                               w[:, half:], u, st1)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                                   np.asarray(y_all), atol=1e-3, rtol=2e-3)
+        np.testing.assert_allclose(np.asarray(st2), np.asarray(st_all),
+                                   atol=1e-3, rtol=2e-3)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,S,H,Kv,hd", [
+        (1, 64, 4, 4, 16),    # MHA
+        (2, 96, 8, 2, 32),    # GQA 4:1
+        (1, 64, 4, 1, 16),    # MQA
+        (1, 50, 4, 2, 16),    # padded seq
+        (2, 64, 6, 3, 64),
+    ])
+    def test_matches_ref_causal(self, B, S, H, Kv, hd):
+        ks = jax.random.split(jax.random.key(S + H + Kv), 3)
+        q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (B, S, Kv, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (B, S, Kv, hd), jnp.float32)
+        sc = 1.0 / hd ** 0.5
+        got = fa_ops.flash_attention(q, k, v, causal=True, scale=sc,
+                                     bq=32, bk=32)
+        want = fa_ref.attention(q, k, v, causal=True, scale=sc)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=1e-4)
+
+    def test_bf16_inputs(self):
+        B, S, H, hd = 1, 64, 4, 32
+        ks = jax.random.split(jax.random.key(0), 3)
+        q = jax.random.normal(ks[0], (B, S, H, hd), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (B, S, H, hd), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (B, S, H, hd), jnp.bfloat16)
+        got = fa_ops.flash_attention(q, k, v, causal=True, scale=0.17,
+                                     bq=32, bk=32)
+        want = fa_ref.attention(q, k, v, causal=True, scale=0.17)
+        assert got.dtype == jnp.bfloat16
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            atol=2e-2, rtol=2e-2)
+
+    def test_first_row_attends_only_self(self):
+        """Causal row 0 output == v0 (softmax over a single key)."""
+        B, S, H, hd = 1, 32, 2, 16
+        ks = jax.random.split(jax.random.key(3), 3)
+        q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (B, S, H, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (B, S, H, hd), jnp.float32)
+        got = fa_ops.flash_attention(q, k, v, causal=True, scale=1.0,
+                                     bq=16, bk=16)
+        np.testing.assert_allclose(np.asarray(got[:, 0]),
+                                   np.asarray(v[:, 0]), atol=1e-5)

@@ -1,0 +1,101 @@
+"""Unit tests for the paper's benchmark problems."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.problems import (f15_ref, make_f15, make_f15_consts,
+                                 make_onemax, make_problem, make_rastrigin,
+                                 make_sphere, make_trap, rastrigin,
+                                 trap_fitness_ref)
+
+
+class TestTrap:
+    def test_all_ones_is_optimum(self):
+        p = make_trap(n_traps=40, l=4)  # the paper's exact problem
+        ones = jnp.ones((1, 160), jnp.int8)
+        assert float(p.evaluate(p.consts, ones)[0]) == pytest.approx(80.0)
+        assert p.optimum == 80.0
+
+    def test_deceptive_structure(self):
+        """Per paper params (a=1,b=2,z=3): u=0 scores a=1, u=3 scores 0,
+        u=4 scores b=2 — all-zeros is the deceptive local optimum."""
+        consts = {"a": 1.0, "b": 2.0, "z": 3.0, "l": 4}
+        blocks = jnp.array([
+            [0, 0, 0, 0],   # u=0 -> 1.0
+            [1, 0, 0, 0],   # u=1 -> 2/3
+            [1, 1, 0, 0],   # u=2 -> 1/3
+            [1, 1, 1, 0],   # u=3 -> 0.0
+            [1, 1, 1, 1],   # u=4 -> 2.0
+        ], dtype=jnp.int8)
+        got = trap_fitness_ref(consts, blocks)
+        np.testing.assert_allclose(
+            np.asarray(got), [1.0, 2 / 3, 1 / 3, 0.0, 2.0], rtol=1e-6)
+
+    def test_multi_block_sum(self):
+        consts = {"a": 1.0, "b": 2.0, "z": 3.0, "l": 4}
+        x = jnp.array([[1, 1, 1, 1, 0, 0, 0, 0]], dtype=jnp.int8)  # 2.0 + 1.0
+        assert float(trap_fitness_ref(consts, x)[0]) == pytest.approx(3.0)
+
+
+class TestRastrigin:
+    def test_zero_at_origin(self):
+        z = jnp.zeros((3, 10))
+        np.testing.assert_allclose(np.asarray(rastrigin(z)), 0.0, atol=1e-5)
+
+    def test_positive_elsewhere(self):
+        z = jnp.full((1, 10), 0.5)
+        assert float(rastrigin(z)[0]) > 0
+
+    def test_integer_lattice_local_minima(self):
+        # f(k) = k^2 per dim for integer k (cos term vanishes)
+        z = jnp.array([[1.0, 2.0]])
+        assert float(rastrigin(z)[0]) == pytest.approx(5.0, abs=1e-4)
+
+
+class TestF15:
+    def test_optimum_at_shift(self):
+        consts = make_f15_consts(jax.random.key(0), 200, 20)
+        val = f15_ref(consts, consts["o"][None, :])
+        np.testing.assert_allclose(np.asarray(val), 0.0, atol=1e-3)
+
+    def test_rotation_matrices_orthogonal(self):
+        consts = make_f15_consts(jax.random.key(0), 200, 20)
+        M = np.asarray(consts["M"])
+        for g in range(M.shape[0]):
+            np.testing.assert_allclose(M[g] @ M[g].T, np.eye(20), atol=1e-4)
+
+    def test_problem_is_maximization_of_negative(self):
+        p = make_f15(jax.random.key(1), dim=100, group=10)
+        at_opt = float(p.evaluate(p.consts, p.consts["o"][None, :])[0])
+        off_opt = float(p.evaluate(p.consts, p.consts["o"][None, :] + 1.0)[0])
+        assert at_opt == pytest.approx(0.0, abs=1e-3)
+        assert off_opt < at_opt
+
+    def test_paper_dimensions_lower(self):
+        """The paper's exact benchmark config (D=1000, m=50) builds + evals."""
+        p = make_f15(dim=1000, group=50)
+        pop = p.init_population(jax.random.key(2), 4)
+        out = p.evaluate(p.consts, pop)
+        assert out.shape == (4,)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+
+class TestRegistry:
+    def test_make_problem(self):
+        for name in ["trap", "onemax", "rastrigin", "sphere"]:
+            p = make_problem(name)
+            pop = p.init_population(jax.random.key(0), 8)
+            fit = p.evaluate(p.consts, pop)
+            assert fit.shape == (8,)
+            assert bool(jnp.all(jnp.isfinite(fit)))
+
+    def test_unknown_raises(self):
+        with pytest.raises(KeyError):
+            make_problem("nope")
+
+    def test_init_population_bounds(self):
+        p = make_rastrigin(dim=16)
+        pop = p.init_population(jax.random.key(0), 100)
+        assert float(pop.min()) >= p.genome.low
+        assert float(pop.max()) <= p.genome.high

@@ -1,0 +1,119 @@
+"""Serving-path correctness: prefill+decode must reproduce the full forward.
+
+For dense/ssm/hybrid/encdec/vlm archs this is (near-)bit-exact. MoE archs
+are excluded from exactness (capacity-based token dropping legitimately
+depends on batch composition) and only checked for finiteness.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import build_model
+
+B, S = 2, 24
+EXACT = [a for a in ARCHS if get_config(a).n_experts == 0]
+MOE = [a for a in ARCHS if get_config(a).n_experts > 0]
+
+
+def _setup(name):
+    cfg = get_config(name, smoke=True)
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    ks = jax.random.split(jax.random.key(1), 3)
+    toks = jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+    if cfg.n_encoder_layers:
+        batch["src_embed"] = jax.random.normal(ks[1], (B, 12, cfg.d_model),
+                                               jnp.float32)
+    if cfg.family == "vlm":
+        batch["vision_embed"] = jax.random.normal(
+            ks[2], (B, cfg.vision_seq, cfg.d_model), jnp.float32)
+    return cfg, m, params, toks, batch
+
+
+@pytest.mark.parametrize("name", EXACT)
+def test_decode_matches_forward(name):
+    cfg, m, params, toks, batch = _setup(name)
+    logits_full, _ = m.forward(params, dict(batch, labels=toks), remat=False)
+    last, caches, xkv = m.prefill(params, dict(batch, tokens=toks[:, :S - 1]),
+                                  max_seq=S + 8 + cfg.n_meta_tokens)
+    # prefill's last logits == forward at S-2
+    np.testing.assert_allclose(np.asarray(last),
+                               np.asarray(logits_full[:, -2]),
+                               atol=2e-4, rtol=2e-4)
+    idx = jnp.int32(S - 1 + cfg.n_meta_tokens)
+    dec, caches = m.decode(params, toks[:, S - 1:S], idx, caches, xkv)
+    np.testing.assert_allclose(np.asarray(dec),
+                               np.asarray(logits_full[:, -1]),
+                               atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("name", EXACT)
+def test_incremental_decode_matches_forward(name):
+    """Teacher-forced multi-step decode reproduces every suffix position."""
+    cfg, m, params, toks, batch = _setup(name)
+    logits_full, _ = m.forward(params, dict(batch, labels=toks), remat=False)
+    split = S - 4
+    _, caches, xkv = m.prefill(params, dict(batch, tokens=toks[:, :split]),
+                               max_seq=S + 4 + cfg.n_meta_tokens)
+    for t in range(split, S):
+        idx = jnp.int32(t + cfg.n_meta_tokens)
+        dec, caches = m.decode(params, toks[:, t:t + 1], idx, caches, xkv)
+        np.testing.assert_allclose(
+            np.asarray(dec), np.asarray(logits_full[:, t]),
+            atol=3e-4, rtol=3e-4,
+            err_msg=f"{name} diverged at decode step {t}")
+
+
+@pytest.mark.parametrize("name", MOE)
+def test_moe_decode_finite_and_close(name):
+    cfg, m, params, toks, batch = _setup(name)
+    logits_full, _ = m.forward(params, dict(batch, labels=toks), remat=False)
+    _, caches, xkv = m.prefill(params, dict(batch, tokens=toks[:, :S - 1]),
+                               max_seq=S + 8)
+    dec, _ = m.decode(params, toks[:, S - 1:S], jnp.int32(S - 1), caches, xkv)
+    assert bool(jnp.isfinite(dec).all())
+    # routing differences bound: logits still correlate strongly
+    a = np.asarray(dec).ravel()
+    b = np.asarray(logits_full[:, -1]).ravel()
+    # forward (long batch) drops tokens the decode step doesn't; on a tiny
+    # random-init model that legitimately shifts logits — require only
+    # strong correlation, not equality.
+    corr = np.corrcoef(a, b)[0, 1]
+    assert corr > 0.8, f"{name}: decode/forward corr {corr}"
+
+
+def test_sliding_window_actually_limits_attention():
+    """hymba: token outside the window (and not meta) must not influence
+    the current token's output."""
+    cfg = get_config("hymba-1.5b", smoke=True)
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (1, S), 0, cfg.vocab_size)
+    # perturb a token far outside every window (needs S > window + margin)
+    w = cfg.sliding_window
+    assert w < S
+    toks2 = toks.at[0, 0].set((toks[0, 0] + 1) % cfg.vocab_size)
+    lg1, _ = m.forward(params, {"tokens": toks, "labels": toks}, remat=False)
+    lg2, _ = m.forward(params, {"tokens": toks2, "labels": toks}, remat=False)
+    # global layers DO see token 0, so outputs differ...
+    assert float(jnp.abs(lg1[:, -1] - lg2[:, -1]).max()) > 0
+    # ...but with global layers removed the last token is out of range
+    import dataclasses
+    cfg_swa = dataclasses.replace(cfg, global_layers=())
+    m2 = build_model(cfg_swa)
+    p2 = m2.init(jax.random.key(0))
+    lg1, _ = m2.forward(p2, {"tokens": toks, "labels": toks}, remat=False)
+    lg2, _ = m2.forward(p2, {"tokens": toks2, "labels": toks}, remat=False)
+    # SSM branch is recurrent (sees everything): compare only attn reach via
+    # identical SSM inputs -> outputs may still differ slightly through ssm.
+    # Instead check the *attention mask* unit directly:
+    from repro.models.attention import _mask
+    q = jnp.array([S - 1 + cfg.n_meta_tokens])
+    kpos = jnp.arange(S + cfg.n_meta_tokens)
+    msk = _mask(q, kpos, True, w + 0, cfg.n_meta_tokens)[0]
+    assert bool(msk[cfg.n_meta_tokens - 1])          # meta visible
+    assert not bool(msk[cfg.n_meta_tokens])          # first real token evicted
+    assert bool(msk[-1])                             # self visible
