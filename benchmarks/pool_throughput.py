@@ -17,8 +17,10 @@ from typing import Dict, List
 import jax
 import numpy as np
 
-from repro.core import (EAConfig, MigrationConfig, PoolServer, make_trap)
+from repro.core import (EAConfig, MigrationConfig, PoolServer, make_trap,
+                        run_fused)
 from repro.core import evolution, island as island_lib, pool as pool_lib
+from repro.core.migration import available_topologies
 
 
 def bench_host_pool(clients_list=(1, 2, 4, 8), requests: int = 2000,
@@ -75,6 +77,33 @@ def bench_device_pool(island_counts=(4, 16, 64), epochs: int = 3) -> List[Dict]:
     return rows
 
 
+def bench_migration(topologies=None, islands: int = 32,
+                    epochs: int = 20) -> List[Dict]:
+    """Epochs/sec per migration topology under the fused lax.scan driver
+    (one compile per topology — the compile is excluded via a warmup run
+    with identical static config, so the timed run hits the jit cache)."""
+    problem = make_trap(n_traps=10, l=4)
+    cfg = EAConfig(max_pop=128, min_pop=64, generations_per_epoch=10)
+    rows = []
+    for topo in (topologies or available_topologies()):
+        mig = MigrationConfig(pool_capacity=64, topology=topo)
+        warm = run_fused(problem, cfg, mig, n_islands=islands,
+                         max_epochs=epochs, rng=jax.random.key(0), w2=True)
+        jax.block_until_ready(warm[0].best_fitness)  # drain async dispatch
+        t0 = time.perf_counter()
+        isl, _, ep = run_fused(problem, cfg, mig, n_islands=islands,
+                               max_epochs=epochs, rng=jax.random.key(1),
+                               w2=True)  # w2: no early exit, fixed work
+        jax.block_until_ready(isl.best_fitness)
+        dt = time.perf_counter() - t0
+        rows.append({"mode": "migration", "topology": topo,
+                     "islands": islands, "epochs": epochs,
+                     "epochs_per_s": epochs / dt,
+                     "generations_per_s":
+                         islands * epochs * cfg.generations_per_epoch / dt})
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=2000)
@@ -85,6 +114,9 @@ def main(argv=None):
     for r in bench_device_pool():
         print(f"device,{r['islands']},{r['migrations_per_s']:.1f}"
               f"  (gens/s {r['generations_per_s']:.0f})")
+    # quick-path settings; benchmarks/run.py --full drives the heavy config
+    for r in bench_migration(islands=16, epochs=6):
+        print(f"migration,{r['topology']},{r['epochs_per_s']:.1f}_epochs/s")
 
 
 if __name__ == "__main__":

@@ -6,6 +6,7 @@ full paper-scale settings are documented per module.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -15,7 +16,9 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale settings (50 trap runs etc.)")
     ap.add_argument("--skip", nargs="*", default=[],
-                    choices=["fig3", "fig4", "pool", "roofline"])
+                    choices=["fig3", "fig4", "pool", "migration", "roofline"])
+    ap.add_argument("--migration-json", default="BENCH_migration.json",
+                    help="machine-readable per-topology throughput output")
     args = ap.parse_args(argv)
     t0 = time.time()
 
@@ -48,6 +51,23 @@ def main(argv=None) -> None:
                 island_counts=(4, 16, 64) if args.full else (4, 16)):
             print(f"device_pool,{r['islands']}_islands,"
                   f"{r['generations_per_s']:.0f}_gens/s")
+        print()
+
+    if "migration" not in args.skip:
+        print("== Migration topologies (fused lax.scan driver) ==")
+        from benchmarks import pool_throughput
+        rows = pool_throughput.bench_migration(
+            islands=32 if args.full else 16,
+            epochs=20 if args.full else 6)
+        for r in rows:
+            print(f"migration,{r['topology']},"
+                  f"{r['epochs_per_s']:.2f}_epochs/s,"
+                  f"{r['generations_per_s']:.0f}_gens/s")
+        with open(args.migration_json, "w") as fh:
+            json.dump({"benchmark": "migration_topologies",
+                       "driver": "run_fused[lax.scan]",
+                       "rows": rows}, fh, indent=2)
+        print(f"wrote {args.migration_json}")
         print()
 
     if "roofline" not in args.skip:

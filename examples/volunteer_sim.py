@@ -10,6 +10,9 @@ Timeline:
                                             opening the experiment URL)
   epoch 12: 6 volunteers LEAVE             (closed tabs; their best work
                                             survives inside the pool)
+A host PoolServer runs alongside with two browser-style PoolClient
+volunteers; a HostBridge (core.migration) syncs it with the device pool
+every epoch — device islands and host volunteers share one experiment.
 Also runs a StragglerMonitor over simulated heterogeneous hardware and
 prints the per-worker work-scale the driver would apply.
 """
@@ -19,7 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import EAConfig, MigrationConfig, make_trap
+from repro.core import (EAConfig, HostBridge, MigrationConfig, PoolClient,
+                        PoolServer, make_trap)
 from repro.core import evolution, island as island_lib, pool as pool_lib
 from repro.runtime import StragglerMonitor, grow_islands, shrink_islands
 
@@ -36,16 +40,45 @@ def main():
     pool = pool_lib.pool_init(mig.pool_capacity, problem.genome)
     mon = StragglerMonitor(threshold=2.0)
 
-    def epoch(islands, pool, key, up):
-        return jax.jit(
-            lambda i, q, kk: evolution.epoch_step(
-                i, q, kk, problem, cfg, mig, False, up))(islands, pool, key)
+    # host side: a REST-semantics PoolServer, two volunteer clients and the
+    # bridge that lets them join the device islands' experiment
+    server = PoolServer(capacity=256, seed=1)
+    volunteers = [PoolClient(server, uuid=100 + i) for i in range(2)]
+    bridge = HostBridge(server, every=1, pull=2)
+    vol_rng = np.random.default_rng(7)
+
+    def volunteer_round():
+        """Each volunteer hill-climbs a random genome a little and PUTs it
+        (a browser tab doing one autonomous epoch)."""
+        for v in volunteers:
+            got = v.get_random()
+            g = (got[0].copy() if got is not None
+                 else vol_rng.integers(0, 2, problem.genome.length)
+                 .astype(np.int8))
+            flip = vol_rng.integers(0, g.size, 4)
+            g[flip] = 1  # volunteers push toward the all-ones optimum
+            f = float(problem.evaluate(problem.consts, g[None])[0])
+            v.put(g, f)
+
+    # one jitted step; up/e are traced args so epochs reuse a single compile
+    epoch = jax.jit(lambda i, q, kk, up, e: evolution.epoch_step(
+        i, q, kk, problem, cfg, mig, False, up, epoch=e))
 
     for e in range(1, 16):
         up = not (3 <= e < 6)
+        if up:
+            server.revive()
+        else:
+            server.kill()
         k, rng = jax.random.split(rng)
         t0 = time.perf_counter()
-        islands, pool = epoch(islands, pool, k, up)
+        islands, pool = epoch(islands, pool, k, up, jnp.int32(e))
+        # sync first so the server is seeded with the device best before the
+        # volunteers GET — a cold-start GET against an empty-but-up server
+        # would otherwise read as a lost XHR
+        pool = bridge.sync(pool, e)
+        if up:
+            volunteer_round()
         mon.record(0, time.perf_counter() - t0)
 
         if e == 8:
@@ -60,10 +93,12 @@ def main():
         best = float(islands.best_fitness.max())
         print(f"epoch {e:2d} [{'server UP ' if up else 'server DOWN'}] "
               f"islands={islands.pop.shape[0]:2d} best={best:5.1f}/40 "
-              f"pool={int(pool.count):2d} {note}")
+              f"pool={int(pool.count):2d} bridge={bridge.stats()} {note}")
         if best >= 40.0:
             print("solution found — experiment over")
             break
+    print(f"volunteer lost XHRs: "
+          f"{[(v.uuid, v.lost_puts + v.lost_gets) for v in volunteers]}")
 
     # straggler demo: simulated heterogeneous fleet
     print("\nstraggler mitigation (simulated heterogeneous volunteers):")

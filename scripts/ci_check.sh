@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 tests + a fast benchmark smoke.
+#
+#   scripts/ci_check.sh            # from anywhere inside the repo
+#
+# KNOWN_FAILING lists modules with pre-existing jax-version breakage in
+# model/sharding-land (AbstractMesh / pjit API drift — tracked in
+# ROADMAP.md); they are excluded so the gate is strict on everything else.
+# Remove entries as they get fixed.
+#
+# The benchmark smoke runs the pool + migration sections only (fig3/fig4
+# replay paper-scale evolution and roofline needs dry-run artifacts) and
+# leaves BENCH_migration.json behind as the machine-readable throughput
+# record (epochs/sec per registered topology via the fused driver).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}"
+
+KNOWN_FAILING=(
+    tests/test_dryrun_small.py
+    tests/test_models_smoke.py
+    tests/test_moe_ep.py
+    tests/test_optim.py
+    tests/test_serve_consistency.py
+    tests/test_shardings.py
+    tests/test_system.py
+)
+
+echo "== tier-1 tests (minus known model-land breakage) =="
+python -m pytest -x -q "${KNOWN_FAILING[@]/#/--ignore=}"
+
+echo "== benchmark smoke (pool + migration) =="
+python -m benchmarks.run --skip fig3 fig4 roofline
+
+echo "ci_check: OK"

@@ -1,0 +1,51 @@
+"""Version compatibility shims.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` (<= 0.4.x, kwarg
+``check_rep``) to ``jax.shard_map`` (>= 0.5, kwarg ``check_vma``). Import it
+from here so every call site works on both:
+
+    from repro.compat import shard_map
+    fn = shard_map(body, mesh=mesh, in_specs=..., out_specs=..., check=False)
+"""
+from __future__ import annotations
+
+import inspect
+
+try:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+except ImportError:  # jax >= 0.5: promoted to the top-level namespace
+    from jax import shard_map as _shard_map
+
+_PARAMS = inspect.signature(_shard_map).parameters
+_CHECK_KW = ("check_rep" if "check_rep" in _PARAMS
+             else "check_vma" if "check_vma" in _PARAMS else None)
+
+
+def shard_map(f, mesh, in_specs, out_specs, check: bool = True):
+    kwargs = {_CHECK_KW: check} if _CHECK_KW is not None else {}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+
+
+def axis_size(axis_name):
+    """Static size of a mapped mesh axis, from inside shard_map/pmap.
+    ``jax.lax.axis_size`` is newer-jax only; ``psum(1, axis)`` is the
+    classic constant-folded equivalent."""
+    import jax
+
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def make_mesh(shape, axis_names):
+    """``jax.make_mesh`` across versions: ``axis_types`` (and
+    ``jax.sharding.AxisType``) only exist on newer jax; fall back to the
+    plain call when they don't."""
+    import jax
+
+    try:
+        axis_types = (jax.sharding.AxisType.Auto,) * len(axis_names)
+    except AttributeError:
+        return jax.make_mesh(shape, axis_names)
+    return jax.make_mesh(shape, axis_names, axis_types=axis_types)

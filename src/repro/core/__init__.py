@@ -5,22 +5,28 @@ Public API:
     EAConfig, MigrationConfig, IslandState, PoolState
     island.init_islands / island_epoch
     pool.pool_init / migrate_batch / migrate_sharded
+    migration.migrate / register_topology / HostBridge (topology registry)
     evolution.run_experiment / run_fused
-    sharded.run_sharded
+    sharded.run_sharded / run_fused_sharded
     async_pool.PoolServer / PoolClient
 """
 from .types import (EAConfig, ExperimentStats, GenomeSpec, IslandState,
                     MigrationConfig, PoolState)
 from .problems import (Problem, make_f15, make_onemax, make_problem,
                        make_rastrigin, make_sphere, make_trap)
-from . import ga, island, pool, evolution, sharded
+from . import ga, island, pool, migration, evolution, sharded
 from .async_pool import PoolClient, PoolServer, PoolUnavailable
 from .evolution import RunResult, run_experiment, run_fused
+from .migration import (HostBridge, available_topologies, get_topology,
+                        register_topology)
+from .sharded import run_fused_sharded, run_sharded
 
 __all__ = [
     "EAConfig", "ExperimentStats", "GenomeSpec", "IslandState",
     "MigrationConfig", "PoolState", "Problem", "make_f15", "make_onemax",
     "make_problem", "make_rastrigin", "make_sphere", "make_trap", "ga",
-    "island", "pool", "evolution", "sharded", "PoolClient", "PoolServer",
-    "PoolUnavailable", "RunResult", "run_experiment", "run_fused",
+    "island", "pool", "migration", "evolution", "sharded", "PoolClient",
+    "PoolServer", "PoolUnavailable", "RunResult", "run_experiment",
+    "run_fused", "HostBridge", "available_topologies", "get_topology",
+    "register_topology", "run_fused_sharded", "run_sharded",
 ]

@@ -82,11 +82,9 @@ class PoolServer:
             raise PoolUnavailable("pool server is down")
 
     # -- REST verbs ----------------------------------------------------------
-    def put(self, genome: Any, fitness: float, uuid: int = 0) -> int:
-        """PUT a chromosome. Returns the current experiment number."""
-        self._check_up()
-        entry = PoolEntry(np.asarray(genome), float(fitness), int(uuid),
-                          self._experiment)
+    def _put(self, entry: PoolEntry) -> int:
+        """Shared PUT path: ring insert, best tracking, journal. Returns the
+        current experiment number."""
         with self._lock:
             self._check_up()
             self._n_puts += 1
@@ -100,23 +98,19 @@ class PoolServer:
                        "fitness": entry.fitness, "exp": self._experiment})
             return self._experiment
 
+    def put(self, genome: Any, fitness: float, uuid: int = 0) -> int:
+        """PUT a chromosome. Returns the current experiment number."""
+        self._check_up()
+        return self._put(PoolEntry(np.asarray(genome), float(fitness),
+                                   int(uuid), self._experiment))
+
     def put_with_payload(self, genome: Any, fitness: float, uuid: int = 0,
                          payload: Any = None) -> int:
         """PUT with opaque side-data (PBT weight snapshots / ckpt paths)."""
         self._check_up()
-        entry = PoolEntry(np.asarray(genome), float(fitness), int(uuid),
-                          self._experiment, payload=payload)
-        with self._lock:
-            self._check_up()
-            self._n_puts += 1
-            if len(self._entries) >= self._capacity:
-                self._entries.pop(0)
-            self._entries.append(entry)
-            if self._best is None or entry.fitness > self._best.fitness:
-                self._best = entry
-            self._log({"op": "put", "uuid": entry.uuid,
-                       "fitness": entry.fitness, "exp": self._experiment})
-            return self._experiment
+        return self._put(PoolEntry(np.asarray(genome), float(fitness),
+                                   int(uuid), self._experiment,
+                                   payload=payload))
 
     def get_random_entry(self) -> Optional[PoolEntry]:
         """GET a random entry with metadata/payload (None when empty)."""

@@ -6,15 +6,21 @@ Two drivers:
   ``(epoch + migrate)`` step. This is the faithful NodIO shape: the host loop
   is where volunteer churn, server failure, host-pool interop and logging
   live (exactly the concerns the paper handles over HTTP).
-* :func:`run_fused` — the whole experiment as one ``lax.while_loop`` for
-  maximum device throughput (the "all islands on one pod" configuration);
-  used by the performance benchmarks.
+* :func:`run_fused` — the whole experiment as one ``lax.scan`` over epochs:
+  donated island/pool buffers, per-epoch stats stacked on device, one
+  compile per (problem, config, topology). Maximum device throughput (the
+  "all islands on one pod" configuration); used by the performance
+  benchmarks. The same scan body runs inside ``shard_map`` for the SPMD
+  variant (see :func:`repro.core.sharded.run_fused_sharded`).
 
 Both operate on a *batch* of islands (leading axis) and support the W²
-variant: restart-on-solution + heterogeneous population sizes.
+variant: restart-on-solution + heterogeneous population sizes. Migration
+is dispatched through the pluggable topology registry
+(:mod:`repro.core.migration` — selected by ``MigrationConfig.topology``).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from functools import partial
@@ -24,7 +30,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import axis_size
+
 from . import island as island_lib
+from . import migration as migration_lib
 from . import pool as pool_lib
 from .problems import Problem
 from .types import (Array, EAConfig, ExperimentStats, IslandState,
@@ -32,16 +41,20 @@ from .types import (Array, EAConfig, ExperimentStats, IslandState,
 
 
 # ---------------------------------------------------------------------------
-# One epoch: autonomous evolution + PUT/GET migration (+ W² restart)
+# One epoch: autonomous evolution + topology migration (+ W² restart)
 # ---------------------------------------------------------------------------
 def epoch_step(islands: IslandState, pool: PoolState, rng: Array,
                problem: Problem, cfg: EAConfig, mig: MigrationConfig,
-               w2: bool, available: Array | bool) -> Tuple[IslandState, PoolState]:
+               w2: bool, available: Array | bool, epoch: Array | int = 0,
+               axis: Optional[str] = None) -> Tuple[IslandState, PoolState]:
+    """One epoch for a batch of islands. ``axis=None`` runs batched on one
+    shard; with a mesh axis name the call must execute inside ``shard_map``
+    and migration uses collectives over that axis."""
     islands = jax.vmap(lambda s: island_lib.island_epoch(s, problem, cfg))(islands)
 
-    pool, imm_g, imm_f = pool_lib.migrate_batch(
-        pool, islands.best_genome, islands.best_fitness, rng,
-        available=available)
+    pool, imm_g, imm_f = migration_lib.migrate(
+        pool, islands.best_genome, islands.best_fitness, rng, mig,
+        axis=axis, epoch=epoch, available=available)
     islands = jax.vmap(
         partial(island_lib.receive_immigrant, replace=mig.replace)
     )(islands, imm_g, imm_f)
@@ -67,14 +80,30 @@ def _success_mask(islands: IslandState, problem: Problem,
     return islands.best_fitness >= problem.optimum - cfg.success_eps
 
 
-def collect_stats(islands: IslandState, epoch: int) -> ExperimentStats:
+def collect_stats(islands: IslandState, epoch: Array | int,
+                  axis: Optional[str] = None) -> ExperimentStats:
+    """Per-epoch record. Under SPMD (``axis`` given, inside shard_map) the
+    reductions are finished with psum/pmax so every shard returns the same
+    *global* stats (replicated output)."""
+    best = islands.best_fitness.max()
+    mean = islands.best_fitness.mean()
+    evals = islands.evaluations.sum()
+    n_done = islands.done.sum()
+    solved = islands.experiments.sum()
+    if axis is not None:
+        n_shards = axis_size(axis)
+        best = jax.lax.pmax(best, axis)
+        mean = jax.lax.psum(mean, axis) / n_shards  # equal n_local per shard
+        evals = jax.lax.psum(evals, axis)
+        n_done = jax.lax.psum(n_done, axis)
+        solved = jax.lax.psum(solved, axis)
     return ExperimentStats(
-        epoch=jnp.int32(epoch),
-        best_fitness=islands.best_fitness.max(),
-        mean_best=islands.best_fitness.mean(),
-        total_evaluations=islands.evaluations.sum(),
-        n_done=islands.done.sum(),
-        experiments_solved=islands.experiments.sum(),
+        epoch=jnp.asarray(epoch, jnp.int32),
+        best_fitness=best,
+        mean_best=mean,
+        total_evaluations=evals,
+        n_done=n_done,
+        experiments_solved=solved,
     )
 
 
@@ -103,6 +132,7 @@ def run_experiment(problem: Problem,
                    w2: bool = False,
                    server_up: Optional[Callable[[int], bool]] = None,
                    host_pool=None,
+                   host_bridge: Optional[migration_lib.HostBridge] = None,
                    stop_on_success: bool = True,
                    verbose: bool = False) -> RunResult:
     """Run a NodIO experiment.
@@ -112,6 +142,9 @@ def run_experiment(problem: Problem,
     core.async_pool.PoolServer) — when given, migration additionally goes
     through the host REST-semantics pool, mixing device islands with any
     external volunteer clients attached to the same server.
+    ``host_bridge`` (a core.migration.HostBridge) — two-way sync: the device
+    pool's best is PUT to the bridged PoolServer and server entries (e.g.
+    volunteer contributions) are pulled into the device pool as immigrants.
     """
     rng = jax.random.key(0) if rng is None else rng
     k_init, rng = jax.random.split(rng)
@@ -119,7 +152,7 @@ def run_experiment(problem: Problem,
     dpool = pool_lib.pool_init(mig.pool_capacity, problem.genome)
 
     step = jax.jit(partial(epoch_step, problem=problem, cfg=cfg, mig=mig,
-                           w2=w2), static_argnames=())
+                           w2=w2))
     stats: List[ExperimentStats] = []
     t0 = time.perf_counter()
     success = False
@@ -128,10 +161,13 @@ def run_experiment(problem: Problem,
     for epoch in range(1, max_epochs + 1):
         rng, k_mig = jax.random.split(rng)
         up = True if server_up is None else bool(server_up(epoch))
-        islands, dpool = step(islands, dpool, k_mig, available=up)
+        islands, dpool = step(islands, dpool, k_mig, available=up,
+                              epoch=epoch)
 
         if host_pool is not None and up:
             _host_pool_exchange(host_pool, islands)
+        if host_bridge is not None:
+            dpool = host_bridge.sync(dpool, epoch)
 
         st = jax.tree.map(lambda x: np.asarray(x), collect_stats(islands, epoch))
         stats.append(st)
@@ -170,40 +206,123 @@ def _host_pool_exchange(host_pool, islands: IslandState) -> None:
 
 
 # ---------------------------------------------------------------------------
-# Fully fused driver (lax.while_loop — benchmark configuration)
+# Fully fused driver (lax.scan — benchmark configuration)
 # ---------------------------------------------------------------------------
+def fused_scan(islands: IslandState, pool: PoolState, key: Array, *,
+               problem: Problem, cfg: EAConfig, mig: MigrationConfig,
+               w2: bool, max_epochs: int, axis: Optional[str] = None,
+               with_stats: bool = True,
+               ) -> Tuple[IslandState, PoolState, Array, ExperimentStats]:
+    """The whole experiment as one ``lax.scan`` over epochs.
+
+    Per-epoch :class:`ExperimentStats` are stacked on device (shape
+    ``(max_epochs, ...)``) — no host round-trip per epoch. Early success
+    (non-W²) freezes the carry via ``lax.cond`` so the remaining iterations
+    are skipped at device speed; ``epochs`` counts the live ones and the
+    stats rows after a stop repeat the frozen final state. With ``axis``
+    the same body runs inside ``shard_map``: the success test and the stats
+    reductions finish with psum/pmax so every shard agrees.
+    ``with_stats=False`` skips stats entirely (returning ``()`` in their
+    place) — under SPMD that avoids the per-epoch psum/pmax scalar
+    collectives when the caller would discard them anyway.
+    """
+    def _global_success(islands: IslandState) -> Array:
+        s = _success_mask(islands, problem, cfg).any()
+        if axis is not None:
+            s = jax.lax.psum(s.astype(jnp.int32), axis) > 0
+        return s
+
+    def body(carry, _):
+        islands, pool, key, epoch, stopped = carry
+        key, k_mig = jax.random.split(key)
+
+        def live(args):
+            i, p = args
+            # epoch + 1: match the host-loop drivers' 1-based epoch numbers
+            # (torus alternates direction on epoch parity)
+            return epoch_step(i, p, k_mig, problem, cfg, mig, w2, True,
+                              epoch=epoch + 1, axis=axis)
+
+        islands, pool = jax.lax.cond(stopped, lambda a: a, live,
+                                     (islands, pool))
+        epoch = jnp.where(stopped, epoch, epoch + 1)
+        if not w2:
+            stopped = stopped | _global_success(islands)
+        stats = collect_stats(islands, epoch, axis=axis) if with_stats else ()
+        return (islands, pool, key, epoch, stopped), stats
+
+    stopped0 = jnp.asarray(False) if w2 else _global_success(islands)
+    init = (islands, pool, key, jnp.int32(0), stopped0)
+    (islands, pool, _, epochs, _), stats = jax.lax.scan(
+        body, init, None, length=max_epochs)
+    return islands, pool, epochs, stats
+
+
+def unique_buffers(tree):
+    """Copy any leaf that aliases an earlier leaf (jax caches small scalar
+    constants, e.g. a fresh pool's ptr/count are one buffer) so the whole
+    tree can be donated without `donated twice` errors."""
+    seen = set()
+
+    def f(x):
+        if id(x) in seen:
+            return x.copy()
+        seen.add(id(x))
+        return x
+
+    return jax.tree.map(f, tree)
+
+
+# One compiled driver per (problem identity, config, topology, driver shape).
+# Problem's dataclass equality excludes ``consts``, so the cache is keyed on
+# object identity (the id is validated against the stored problem — the
+# jitted closure keeps it alive, so a live hit can't be a recycled id).
+# Bounded LRU over (problem, static_key) pairs: jitted drivers and their
+# executables are evicted oldest-first.
+_FUSED_CACHE: "collections.OrderedDict[tuple, Tuple[Problem, Callable]]" = \
+    collections.OrderedDict()
+_FUSED_CACHE_MAX = 32
+
+
+def fused_jit(problem: Problem, static_key: tuple,
+              builder: Callable[[], Callable]) -> Callable:
+    """Memoize ``builder()`` per ``problem`` object + ``static_key`` so
+    repeated fused runs reuse one compiled executable per topology."""
+    key = (id(problem), static_key)
+    entry = _FUSED_CACHE.get(key)
+    if entry is None or entry[0] is not problem:
+        _FUSED_CACHE[key] = entry = (problem, builder())
+        while len(_FUSED_CACHE) > _FUSED_CACHE_MAX:
+            _FUSED_CACHE.popitem(last=False)
+    _FUSED_CACHE.move_to_end(key)
+    return entry[1]
+
+
 def run_fused(problem: Problem,
               cfg: EAConfig = EAConfig(),
               mig: MigrationConfig = MigrationConfig(),
               n_islands: int = 8,
               max_epochs: int = 100,
               rng: Optional[Array] = None,
-              w2: bool = False) -> Tuple[IslandState, PoolState, Array]:
-    """Entire experiment in one jitted while_loop. Returns final state and
-    the number of epochs executed. Stops early on global success (non-W²)."""
+              w2: bool = False,
+              return_stats: bool = False):
+    """Entire experiment in one jitted ``lax.scan`` with donated island/pool
+    buffers. Returns ``(islands, pool, epochs)`` — plus the stacked
+    per-epoch :class:`ExperimentStats` when ``return_stats`` is true. Stops
+    early on global success (non-W²)."""
     rng = jax.random.key(0) if rng is None else rng
     k_init, k_loop = jax.random.split(rng)
     islands0 = island_lib.init_islands(k_init, n_islands, problem, cfg)
     pool0 = pool_lib.pool_init(mig.pool_capacity, problem.genome)
 
-    def cond(carry):
-        islands, _, _, epoch = carry
-        any_success = _success_mask(islands, problem, cfg).any()
-        run_on = (epoch < max_epochs)
-        if not w2:
-            run_on &= ~any_success
-        return run_on
-
-    def body(carry):
-        islands, pool, key, epoch = carry
-        key, k_mig = jax.random.split(key)
-        islands, pool = epoch_step(islands, pool, k_mig, problem, cfg, mig,
-                                   w2, True)
-        return islands, pool, key, epoch + 1
-
-    @jax.jit
-    def run(islands0, pool0, key):
-        return jax.lax.while_loop(cond, body, (islands0, pool0, key, jnp.int32(0)))
-
-    islands, pool, _, epochs = run(islands0, pool0, k_loop)
+    run = fused_jit(
+        problem, ("batched", cfg, mig, w2, max_epochs, return_stats),
+        lambda: jax.jit(partial(fused_scan, problem=problem, cfg=cfg,
+                                mig=mig, w2=w2, max_epochs=max_epochs,
+                                with_stats=return_stats),
+                        donate_argnums=(0, 1)))
+    islands0, pool0 = unique_buffers((islands0, pool0))
+    islands, pool, epochs, stats = run(islands0, pool0, k_loop)
+    if return_stats:
+        return islands, pool, epochs, stats
     return islands, pool, epochs

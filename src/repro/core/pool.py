@@ -96,61 +96,35 @@ def pool_best(pool: PoolState) -> Tuple[Array, Array]:
 
 
 # ---------------------------------------------------------------------------
-# Migration (batched islands, single shard)
+# Migration — thin wrappers over the unified engine (core.migration).
+# Kept for API stability; new code should call migration.migrate directly.
 # ---------------------------------------------------------------------------
 def migrate_batch(pool: PoolState, bests_genome: Array, bests_fitness: Array,
                   rng: Array, available: Array | bool = True,
+                  mig: Optional[MigrationConfig] = None, epoch: Array | int = 0,
                   ) -> Tuple[PoolState, Array, Array]:
-    """PUT all island bests, then GET one random immigrant per island.
+    """PUT all island bests, then GET one random immigrant per island
+    (or whatever exchange ``mig.topology`` selects — default: pool).
 
     available=False emulates a dead server: pool unchanged, immigrants are
     marked -inf so islands continue standalone (the paper's fault-tolerance
     property).
     """
-    n = bests_genome.shape[0]
-    available = jnp.asarray(available)
-    new_pool = pool_put_batch(pool, bests_genome, bests_fitness)
-    pool = jax.tree.map(lambda a, b: jnp.where(available, a, b), new_pool, pool)
-    keys = jax.random.split(rng, n)
-    genomes, fits = jax.vmap(lambda k: pool_get_random(pool, k))(keys)
-    fits = jnp.where(available, fits, NEG_INF)
-    return pool, genomes, fits
+    from . import migration  # local import: migration imports pool primitives
+    return migration.migrate(pool, bests_genome, bests_fitness, rng,
+                             mig if mig is not None else MigrationConfig(),
+                             axis=None, epoch=epoch, available=available)
 
 
-# ---------------------------------------------------------------------------
-# Migration (SPMD, inside shard_map over an island axis)
-# ---------------------------------------------------------------------------
 def migrate_sharded(pool: PoolState, bests_genome: Array, bests_fitness: Array,
                     rng: Array, axis: str, cfg: MigrationConfig,
-                    available: Array | bool = True,
+                    available: Array | bool = True, epoch: Array | int = 0,
                     ) -> Tuple[PoolState, Array, Array]:
-    """Collective migration across the ``axis`` mesh dimension.
-
-    all_gather mode: gather every shard's bests -> identical pool update on
-    each shard -> local random GETs. ring mode: each shard's bests go to the
-    next shard (collective_permute); the pool is bypassed.
-    Local arrays carry this shard's islands: bests_* is (n_local, L).
+    """Collective migration across the ``axis`` mesh dimension, dispatched
+    through the topology registry (core.migration). ``cfg.topology`` picks
+    the strategy; the legacy ``cfg.collective='ring'`` still selects the
+    ring. Local arrays carry this shard's islands: bests_* is (n_local, L).
     """
-    if cfg.collective == "ring":
-        n_shards = jax.lax.axis_size(axis)
-        idx = jax.lax.axis_index(axis)
-        perm = [(i, (i + 1) % n_shards) for i in range(n_shards)]
-        imm_g = jax.lax.ppermute(bests_genome, axis, perm)
-        imm_f = jax.lax.ppermute(bests_fitness, axis, perm)
-        imm_f = jnp.where(jnp.asarray(available), imm_f, NEG_INF)
-        return pool, imm_g, imm_f
-
-    # all_gather mode — the faithful PUT/GET pool semantics.
-    all_g = jax.lax.all_gather(bests_genome, axis, tiled=True)    # (n_total, L)
-    all_f = jax.lax.all_gather(bests_fitness, axis, tiled=True)   # (n_total,)
-    # Same data + same deterministic update on every shard => replicas agree.
-    available = jnp.asarray(available)
-    new_pool = pool_put_batch(pool, all_g, all_f)
-    pool = jax.tree.map(lambda a, b: jnp.where(available, a, b), new_pool, pool)
-    n_local = bests_genome.shape[0]
-    # Decorrelate shards: fold the shard index into the key.
-    rng = jax.random.fold_in(rng, jax.lax.axis_index(axis))
-    keys = jax.random.split(rng, n_local)
-    genomes, fits = jax.vmap(lambda k: pool_get_random(pool, k))(keys)
-    fits = jnp.where(available, fits, NEG_INF)
-    return pool, genomes, fits
+    from . import migration  # local import: migration imports pool primitives
+    return migration.migrate(pool, bests_genome, bests_fitness, rng, cfg,
+                             axis=axis, epoch=epoch, available=available)

@@ -1,14 +1,23 @@
 """SPMD NodIO: islands sharded across a mesh axis via shard_map.
 
 Maps the volunteer fleet onto hardware: every device (or device row) hosts a
-contiguous slab of islands; migration is the only cross-device communication
-(all_gather'd pool update or ring permute — see core.pool.migrate_sharded),
-mirroring the paper's server round-trip every ``generations_per_epoch``.
+contiguous slab of islands; migration is the only cross-device communication,
+dispatched through the pluggable topology registry (core.migration — pool
+all_gather, ring/torus permutes, random graph, elite broadcast), mirroring
+the paper's server round-trip every ``generations_per_epoch``.
 
-The entry point :func:`run_sharded` works on any 1-D mesh ("islands" axis).
-On the production mesh the same step runs with the island axis mapped to
-("pod", "data") and fitness evaluation sharded over "model" (see
-launch/evolve.py).
+Two drivers:
+
+* :func:`run_sharded` — host loop around a jitted shard_map epoch step.
+  The host loop is where server failure and the host↔device pool bridge
+  (core.migration.HostBridge) live.
+* :func:`run_fused_sharded` — the whole experiment as one
+  ``shard_map(lax.scan)``: donated buffers, per-epoch stats stacked on
+  device, a single compile per topology.
+
+Both work on any 1-D mesh ("islands" axis). On the production mesh the same
+step runs with the island axis mapped to ("pod", "data") and fitness
+evaluation sharded over "model" (see launch/evolve.py).
 """
 from __future__ import annotations
 
@@ -18,57 +27,60 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
 
+from repro.compat import shard_map
+
+from . import evolution as evolution_lib
 from . import island as island_lib
+from . import migration as migration_lib
 from . import pool as pool_lib
 from .problems import Problem
-from .types import Array, EAConfig, IslandState, MigrationConfig, PoolState
+from .types import (Array, EAConfig, ExperimentStats, IslandState,
+                    MigrationConfig, PoolState)
 
 
-def _epoch_shard(islands: IslandState, pool: PoolState, rng: Array,
-                 problem: Problem, cfg: EAConfig, mig: MigrationConfig,
-                 axis: str, w2: bool, available) -> Tuple[IslandState, PoolState]:
-    """Body executed per shard: local islands evolve, then collective
-    migration. ``rng`` is the *replicated* epoch key; shard decorrelation
-    happens inside migrate_sharded via fold_in(axis_index)."""
-    islands = jax.vmap(lambda s: island_lib.island_epoch(s, problem, cfg))(islands)
-    pool, imm_g, imm_f = pool_lib.migrate_sharded(
-        pool, islands.best_genome, islands.best_fitness, rng, axis, mig,
-        available=available)
-    islands = jax.vmap(
-        partial(island_lib.receive_immigrant, replace=mig.replace)
-    )(islands, imm_g, imm_f)
-    if w2:
-        succeeded = islands.best_fitness >= (
-            jnp.inf if problem.optimum is None
-            else problem.optimum - cfg.success_eps)
-        restarted = jax.vmap(
-            lambda s: island_lib.restart_island(s, problem, cfg))(islands)
-        islands = jax.tree.map(
-            lambda r, o: jnp.where(
-                succeeded.reshape(succeeded.shape + (1,) * (r.ndim - 1)), r, o),
-            restarted, islands)
-    return islands, pool
+def _island_spec(axis: str):
+    return IslandState(*[P(axis)] * len(IslandState._fields))
+
+
+def _pool_spec():
+    return PoolState(*[P()] * len(PoolState._fields))
 
 
 def make_sharded_epoch(mesh: Mesh, axis: str, problem: Problem,
                        cfg: EAConfig, mig: MigrationConfig, w2: bool = False):
     """Build the jitted SPMD epoch step for ``mesh`` with islands sharded
-    over ``axis``. Pool state is replicated; island batch is sharded."""
-    island_spec = jax.tree.map(lambda _: P(axis), IslandState(
-        *[None] * len(IslandState._fields)))
-    pool_spec = jax.tree.map(lambda _: P(), PoolState(*[None] * 4))
+    over ``axis``. Pool state is replicated; island batch is sharded.
+    The per-shard body is evolution.epoch_step — the exact same code path
+    as the batched drivers, with collectives enabled by ``axis``."""
+    def body(islands, pool, rng, available, epoch):
+        return evolution_lib.epoch_step(islands, pool, rng, problem, cfg,
+                                        mig, w2, available, epoch, axis)
 
     fn = shard_map(
-        partial(_epoch_shard, problem=problem, cfg=cfg, mig=mig, axis=axis,
-                w2=w2),
+        body,
         mesh=mesh,
-        in_specs=(island_spec, pool_spec, P(), None),
-        out_specs=(island_spec, pool_spec),
-        check_rep=False,
+        in_specs=(_island_spec(axis), _pool_spec(), P(), None, P()),
+        out_specs=(_island_spec(axis), _pool_spec()),
+        check=False,
     )
     return jax.jit(fn)
+
+
+def _init_sharded(mesh: Mesh, axis: str, problem: Problem, cfg: EAConfig,
+                  mig: MigrationConfig, islands_per_shard: int, rng: Array,
+                  ) -> Tuple[IslandState, PoolState, Array]:
+    n_islands = mesh.shape[axis] * islands_per_shard
+    k_init, rng = jax.random.split(rng)
+    islands = island_lib.init_islands(k_init, n_islands, problem, cfg)
+    pool = pool_lib.pool_init(mig.pool_capacity, problem.genome)
+    ish = jax.tree.map(
+        lambda x: jax.device_put(x, NamedSharding(
+            mesh, P(axis, *([None] * (x.ndim - 1))))),
+        islands)
+    psh = jax.tree.map(
+        lambda x: jax.device_put(x, NamedSharding(mesh, P())), pool)
+    return ish, psh, rng
 
 
 def run_sharded(mesh: Mesh, problem: Problem,
@@ -78,28 +90,79 @@ def run_sharded(mesh: Mesh, problem: Problem,
                 max_epochs: int = 50,
                 rng: Optional[Array] = None,
                 w2: bool = False,
-                axis: str = "islands") -> Tuple[IslandState, PoolState, int]:
-    """Run a sharded experiment until success or max_epochs (host loop)."""
+                axis: str = "islands",
+                server_up=None,
+                host_bridge: Optional[migration_lib.HostBridge] = None,
+                ) -> Tuple[IslandState, PoolState, int]:
+    """Run a sharded experiment until success or max_epochs (host loop).
+
+    ``server_up(epoch) -> bool`` injects pool-server failure; while the
+    server is down migration is a no-op and islands evolve standalone.
+    ``host_bridge`` syncs the replicated device pool with a host PoolServer
+    between epochs (volunteer clients join the pod's experiment).
+    """
     rng = jax.random.key(0) if rng is None else rng
-    n_shards = mesh.shape[axis]
-    n_islands = n_shards * islands_per_shard
-    k_init, rng = jax.random.split(rng)
-    islands = island_lib.init_islands(k_init, n_islands, problem, cfg)
-    pool = pool_lib.pool_init(mig.pool_capacity, problem.genome)
-
-    ish = jax.tree.map(
-        lambda x: jax.device_put(x, NamedSharding(mesh, P(axis, *([None] * (x.ndim - 1))))),
-        islands)
-    psh = jax.tree.map(
-        lambda x: jax.device_put(x, NamedSharding(mesh, P())), pool)
-
+    ish, psh, rng = _init_sharded(mesh, axis, problem, cfg, mig,
+                                  islands_per_shard, rng)
     step = make_sharded_epoch(mesh, axis, problem, cfg, mig, w2)
     epoch = 0
     for epoch in range(1, max_epochs + 1):
         rng, k = jax.random.split(rng)
-        ish, psh = step(ish, psh, k, True)
+        up = True if server_up is None else bool(server_up(epoch))
+        ish, psh = step(ish, psh, k, up, epoch)
+        # due() check first: sync would no-op anyway, but the device_get
+        # round-trip of the replicated pool is worth skipping off-cycle
+        if host_bridge is not None and host_bridge.due(epoch):
+            psh = jax.tree.map(
+                lambda x: jax.device_put(x, NamedSharding(mesh, P())),
+                host_bridge.sync(jax.device_get(psh), epoch))
         if problem.optimum is not None and not w2:
             best = float(jax.device_get(ish.best_fitness.max()))
             if best >= problem.optimum - cfg.success_eps:
                 break
     return ish, psh, epoch
+
+
+def run_fused_sharded(mesh: Mesh, problem: Problem,
+                      cfg: EAConfig = EAConfig(),
+                      mig: MigrationConfig = MigrationConfig(),
+                      islands_per_shard: int = 4,
+                      max_epochs: int = 50,
+                      rng: Optional[Array] = None,
+                      w2: bool = False,
+                      axis: str = "islands",
+                      return_stats: bool = False):
+    """The whole sharded experiment as one ``shard_map(lax.scan)`` — a
+    single compile per topology, donated island/pool buffers, per-epoch
+    global stats stacked on device (psum/pmax-reduced, replicated).
+    Returns ``(islands, pool, epochs)`` (+ stacked stats when asked)."""
+    rng = jax.random.key(0) if rng is None else rng
+    ish, psh, rng = _init_sharded(mesh, axis, problem, cfg, mig,
+                                  islands_per_shard, rng)
+    _, k_loop = jax.random.split(rng)
+
+    def build():
+        # with return_stats=False the scan emits () in the stats slot and
+        # skips the per-epoch psum/pmax scalar reductions entirely
+        stats_spec = (ExperimentStats(*[P()] * len(ExperimentStats._fields))
+                      if return_stats else ())
+        fn = shard_map(
+            partial(evolution_lib.fused_scan, problem=problem, cfg=cfg,
+                    mig=mig, w2=w2, max_epochs=max_epochs, axis=axis,
+                    with_stats=return_stats),
+            mesh=mesh,
+            in_specs=(_island_spec(axis), _pool_spec(), P()),
+            out_specs=(_island_spec(axis), _pool_spec(), P(), stats_spec),
+            check=False,
+        )
+        return jax.jit(fn, donate_argnums=(0, 1))
+
+    run = evolution_lib.fused_jit(
+        problem,
+        ("sharded", cfg, mig, w2, max_epochs, axis, mesh, return_stats),
+        build)
+    ish, psh = evolution_lib.unique_buffers((ish, psh))
+    islands, pool, epochs, stats = run(ish, psh, k_loop)
+    if return_stats:
+        return islands, pool, epochs, stats
+    return islands, pool, epochs

@@ -80,7 +80,15 @@ class MigrationConfig:
     pool_capacity: int = 64          # chromosomes retained server-side
     get_random: bool = True          # GET a uniformly random pool member
     replace: str = "worst"           # immigrant replaces 'worst' | 'random'
-    collective: str = "all_gather"   # 'all_gather' | 'ring' (device pool impl)
+    # Legacy alias: 'ring' selects the ring topology — in EVERY driver now
+    # (pre-refactor only the sharded driver honoured it). Set ``topology``
+    # explicitly instead; any explicit value (including 'pool') wins.
+    collective: str = "all_gather"
+    # Registered migration topology (core.migration): 'pool' | 'ring' |
+    # 'torus' | 'random_graph' | 'broadcast_best' | any custom registration.
+    # None = unset: resolves to the legacy ``collective`` mapping ('ring' ->
+    # ring), else 'pool'.
+    topology: Optional[str] = None
 
 
 # ---------------------------------------------------------------------------

@@ -23,10 +23,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, get_config
-from repro.core import (EAConfig, MigrationConfig, PoolServer, make_problem,
-                        run_experiment)
+from repro.core import (EAConfig, HostBridge, MigrationConfig, PoolServer,
+                        available_topologies, make_problem, run_experiment,
+                        run_fused)
 from repro.core import pbt as pbt_lib
-from repro.core.sharded import run_sharded
+from repro.core.sharded import run_fused_sharded, run_sharded
 from repro.data import SyntheticLM
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import TrainState, init_train_state
@@ -36,30 +37,59 @@ from repro.optim import adamw_update
 
 def run_ea(problem_name: str = "trap", islands: int = 8, epochs: int = 50,
            w2: bool = False, sharded: bool = False, seed: int = 0,
-           verbose: bool = True, **problem_kwargs):
+           verbose: bool = True, topology: str = "pool", fused: bool = False,
+           bridge: bool = False, **problem_kwargs):
+    """Run the NodIO experiment. ``topology`` selects the registered
+    migration strategy, ``fused`` the lax.scan driver (single compile, max
+    device throughput), ``bridge`` attaches a host PoolServer through a
+    HostBridge (host-loop drivers only)."""
     problem = make_problem(problem_name, **problem_kwargs)
     cfg = EAConfig()
-    mig = MigrationConfig()
+    mig = MigrationConfig(topology=topology)
+    host_bridge = HostBridge(PoolServer(capacity=256, seed=seed)) \
+        if bridge else None
+    if bridge and fused:
+        print("note: --bridge needs a host loop; the fused lax.scan driver "
+              "runs entirely on device — bridge disabled")
+        host_bridge = None
     t0 = time.time()
     if sharded:
         mesh = make_host_mesh()
         n_shards = mesh.shape["islands"]
         per = max(1, islands // n_shards)
-        isl, pool, ep = run_sharded(mesh, problem, cfg, mig,
-                                    islands_per_shard=per,
-                                    max_epochs=epochs, w2=w2,
-                                    rng=jax.random.key(seed))
+        if fused:
+            isl, pool, ep = run_fused_sharded(
+                mesh, problem, cfg, mig, islands_per_shard=per,
+                max_epochs=epochs, w2=w2, rng=jax.random.key(seed))
+        else:
+            isl, pool, ep = run_sharded(mesh, problem, cfg, mig,
+                                        islands_per_shard=per,
+                                        max_epochs=epochs, w2=w2,
+                                        rng=jax.random.key(seed),
+                                        host_bridge=host_bridge)
         best = float(jax.device_get(isl.best_fitness.max()))
         if verbose:
-            print(f"[sharded x{n_shards}] best={best} epochs={ep} "
+            print(f"[sharded x{n_shards} {'fused ' if fused else ''}"
+                  f"topo={topology}] best={best} epochs={int(ep)} "
+                  f"({time.time()-t0:.1f}s)")
+        return isl, pool
+    if fused:
+        isl, pool, ep = run_fused(problem, cfg, mig, n_islands=islands,
+                                  max_epochs=epochs, w2=w2,
+                                  rng=jax.random.key(seed))
+        if verbose:
+            best = float(jax.device_get(isl.best_fitness.max()))
+            print(f"[fused topo={topology}] best={best} epochs={int(ep)} "
                   f"({time.time()-t0:.1f}s)")
         return isl, pool
     res = run_experiment(problem, cfg, mig, n_islands=islands,
                          max_epochs=epochs, w2=w2,
-                         rng=jax.random.key(seed), verbose=verbose)
+                         rng=jax.random.key(seed), verbose=verbose,
+                         host_bridge=host_bridge)
     if verbose:
         print(f"success={res.success} evals_to_solution="
-              f"{res.evaluations_to_solution} wall={res.wall_time_s:.1f}s")
+              f"{res.evaluations_to_solution} wall={res.wall_time_s:.1f}s"
+              + (f" bridge={host_bridge.stats()}" if host_bridge else ""))
     return res
 
 
@@ -117,6 +147,13 @@ def main(argv=None):
     ea.add_argument("--epochs", type=int, default=50)
     ea.add_argument("--w2", action="store_true")
     ea.add_argument("--sharded", action="store_true")
+    ea.add_argument("--topology", default="pool",
+                    choices=available_topologies(),
+                    help="registered migration topology (core.migration)")
+    ea.add_argument("--fused", action="store_true",
+                    help="lax.scan fused driver (single compile per topology)")
+    ea.add_argument("--bridge", action="store_true",
+                    help="sync the device pool with a host PoolServer")
     pbt = sub.add_parser("pbt")
     pbt.add_argument("--arch", choices=ARCHS, default="minicpm-2b")
     pbt.add_argument("--members", type=int, default=4)
@@ -125,7 +162,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.mode == "ea":
         run_ea(args.problem, args.islands, args.epochs, args.w2,
-               args.sharded)
+               args.sharded, topology=args.topology, fused=args.fused,
+               bridge=args.bridge)
     else:
         run_pbt(args.arch, args.members, args.epochs, args.steps_per_epoch)
 

@@ -15,21 +15,20 @@ from typing import Tuple
 import jax
 from jax.sharding import Mesh
 
+from repro.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(n: int | None = None, axis: str = "islands") -> Mesh:
     """1-D mesh over however many (possibly fake) devices exist — used by
     the sharded evolution runner and small-mesh tests."""
     devs = jax.devices()[: (n or len(jax.devices()))]
-    return jax.make_mesh((len(devs),), (axis,),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh((len(devs),), (axis,))
 
 
 def dp_axes(mesh: Mesh) -> Tuple[str, ...]:

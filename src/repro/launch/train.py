@@ -38,8 +38,8 @@ def make_mesh_for_devices():
         if n % cand == 0 and cand <= n:
             model_par = cand
             break
-    return jax.make_mesh((n // model_par, model_par), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+    return make_mesh((n // model_par, model_par), ("data", "model"))
 
 
 def train(arch: str, smoke: bool = True, steps: int = 100, batch: int = 8,

@@ -103,8 +103,9 @@ def _apply_ep(p: Dict, cfg: ModelConfig, x: Array,
     all-reduce. Compared to the pjit scatter dispatch this removes every
     token gather/scatter collective (measured: O(TB) of wire on dbrx).
     """
-    from jax import shard_map
     from jax.sharding import PartitionSpec as SP
+
+    from repro.compat import shard_map
 
     n_ep = mesh.shape["model"]
     e_local = cfg.n_experts // n_ep
@@ -171,7 +172,7 @@ def _apply_ep(p: Dict, cfg: ModelConfig, x: Array,
         out_specs=(SP("data", None, None),
                    {"load_balance": SP(), "router_z": SP(),
                     "dropped_frac": SP()}),
-        check_vma=False)
+        check=False)
     return fn(x, p["router"], *[p[n] for n in w_names])
 
 

@@ -24,6 +24,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size
+
 
 def _quant_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
@@ -39,7 +41,7 @@ def compress_psum(grads: Any, err: Any, axis: str,
                   method: str = "int8") -> Tuple[Any, Any]:
     """Cross-pod mean of ``grads`` with error feedback. Call INSIDE a
     shard_map that has ``axis`` unreduced. Returns (synced_grads, new_err)."""
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
 
     def one(g, e):
         gf = g.astype(jnp.float32) + e

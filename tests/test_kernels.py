@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_stub import given, settings, st
 
 from repro.core.problems import make_f15_consts
 from repro.kernels.trap import ops as trap_ops, ref as trap_ref
