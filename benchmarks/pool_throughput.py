@@ -17,8 +17,8 @@ from typing import Dict, List
 import jax
 import numpy as np
 
-from repro.core import (EAConfig, MigrationConfig, PoolServer, make_trap,
-                        run_fused)
+from repro.core import (AsyncConfig, EAConfig, MigrationConfig, PoolServer,
+                        make_trap, run_fused, run_fused_async)
 from repro.core import evolution, island as island_lib, pool as pool_lib
 from repro.core.migration import available_topologies
 
@@ -104,6 +104,58 @@ def bench_migration(topologies=None, islands: int = 32,
     return rows
 
 
+def bench_async(topologies=("pool", "ring"), islands: int = 32,
+                epochs: int = 20) -> List[Dict]:
+    """Sync vs async runtime throughput under churn: the fused lax.scan
+    driver against the per-island-clock fused async driver
+    (core.async_migration) at three operating points — degenerate (the
+    bit-for-bit anchor: measures pure runtime overhead), heterogeneous
+    volunteer speeds, and heterogeneous + 30% churn (the paper's
+    fault-tolerance regime). Ticks/sec is wall-clock scan throughput;
+    island_epochs/sec counts the autonomous epochs actually fired (async
+    islands skip ticks their clock hasn't earned)."""
+    problem = make_trap(n_traps=10, l=4)
+    cfg = EAConfig(max_pop=128, min_pop=64, generations_per_epoch=10)
+    points = [
+        ("sync", None),
+        ("async_degenerate", AsyncConfig()),
+        ("async_hetero", AsyncConfig(min_rate=0.25, max_rate=1.0,
+                                     staleness=3)),
+        ("async_hetero_churn", AsyncConfig(min_rate=0.25, max_rate=1.0,
+                                           staleness=3,
+                                           churn_fraction=0.3)),
+    ]
+    rows = []
+    for topo in topologies:
+        mig = MigrationConfig(pool_capacity=64, topology=topo)
+        for name, acfg in points:
+            def once(seed):
+                if acfg is None:
+                    out = run_fused(problem, cfg, mig, n_islands=islands,
+                                    max_epochs=epochs,
+                                    rng=jax.random.key(seed), w2=True)
+                    return out[0], islands * epochs
+                isl, _, _, astate = run_fused_async(
+                    problem, cfg, mig, acfg, n_islands=islands,
+                    max_ticks=epochs, rng=jax.random.key(seed), w2=True,
+                    return_astate=True)
+                return isl, int(np.asarray(astate.fires).sum())
+
+            warm, _ = once(0)
+            jax.block_until_ready(warm.best_fitness)
+            t0 = time.perf_counter()
+            isl, fired = once(1)
+            jax.block_until_ready(isl.best_fitness)
+            dt = time.perf_counter() - t0
+            rows.append({"mode": "async_vs_sync", "runtime": name,
+                         "topology": topo, "islands": islands,
+                         "ticks": epochs,
+                         "ticks_per_s": epochs / dt,
+                         "island_epochs_fired": fired,
+                         "island_epochs_per_s": fired / dt})
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=2000)
@@ -117,6 +169,10 @@ def main(argv=None):
     # quick-path settings; benchmarks/run.py --full drives the heavy config
     for r in bench_migration(islands=16, epochs=6):
         print(f"migration,{r['topology']},{r['epochs_per_s']:.1f}_epochs/s")
+    for r in bench_async(islands=16, epochs=6):
+        print(f"async,{r['runtime']},{r['topology']},"
+              f"{r['ticks_per_s']:.1f}_ticks/s,"
+              f"{r['island_epochs_per_s']:.0f}_island_epochs/s")
 
 
 if __name__ == "__main__":

@@ -63,10 +63,22 @@ def main(argv=None) -> None:
             print(f"migration,{r['topology']},"
                   f"{r['epochs_per_s']:.2f}_epochs/s,"
                   f"{r['generations_per_s']:.0f}_gens/s")
+        print("== Sync vs async runtime under churn ==")
+        async_rows = pool_throughput.bench_async(
+            islands=32 if args.full else 16,
+            epochs=20 if args.full else 6)
+        for r in async_rows:
+            print(f"async,{r['runtime']},{r['topology']},"
+                  f"{r['ticks_per_s']:.2f}_ticks/s,"
+                  f"{r['island_epochs_per_s']:.0f}_island_epochs/s")
         with open(args.migration_json, "w") as fh:
             json.dump({"benchmark": "migration_topologies",
                        "driver": "run_fused[lax.scan]",
-                       "rows": rows}, fh, indent=2)
+                       "rows": rows,
+                       "async_vs_sync_under_churn": {
+                           "driver": "run_fused_async[lax.scan"
+                                     "+per-island fire mask]",
+                           "rows": async_rows}}, fh, indent=2)
         print(f"wrote {args.migration_json}")
         print()
 

@@ -1,50 +1,60 @@
 """Volunteer-fleet simulation: churn, server failure, stragglers — the
 paper's fault-tolerance story made executable.
 
-    PYTHONPATH=src python examples/volunteer_sim.py
+    PYTHONPATH=src python examples/volunteer_sim.py              # sync demo
+    PYTHONPATH=src python examples/volunteer_sim.py --runtime async \
+        --min-rate 0.25 --max-rate 1.0 --staleness 3 --churn 0.4
 
-Timeline:
+Sync timeline (the PR-1 demo, epoch-lockstep migration):
   epoch  3: the pool server DIES          (islands keep evolving standalone)
   epoch  6: the server comes back          (migration resumes, state intact)
   epoch  8: 4 volunteers JOIN              (seeded from the pool, like
                                             opening the experiment URL)
   epoch 12: 6 volunteers LEAVE             (closed tabs; their best work
                                             survives inside the pool)
-A host PoolServer runs alongside with two browser-style PoolClient
-volunteers; a HostBridge (core.migration) syncs it with the device pool
-every epoch — device islands and host volunteers share one experiment.
-Also runs a StragglerMonitor over simulated heterogeneous hardware and
-prints the per-worker work-scale the driver would apply.
+
+Async runtime (``--runtime async``, core.async_migration) — the paper's
+*actual* regime, no epoch barrier. Heterogeneous-rate / churn knobs:
+
+  --min-rate/--max-rate   volunteer-speed model: each island's clock rate
+                          is drawn from U[min_rate, max_rate] clock-units
+                          per tick (0.25..1.0 ~ a phone vs a desktop); an
+                          island fires — evolves one autonomous epoch and
+                          exchanges — whenever its own clock crosses 1.
+  --staleness N           immigrant inbox bound: a delivery parked in an
+                          island's on-device inbox is absorbable for N
+                          ticks, then expires (slow islands never act on
+                          arbitrarily old genomes).
+  --churn F               fraction of islands given a seeded down-window:
+                          they go available=False mid-run (frozen — a
+                          closed tab) and later rejoin with state intact.
+  --topology NAME         any registered topology; the fire mask rides the
+                          vector ``available`` through core.migration.
+
+In both modes a host PoolServer runs alongside with two browser-style
+PoolClient volunteers; a HostBridge (sync) or non-blocking AsyncHostBridge
+(async — server I/O on a worker thread, exactly-once delivery via the
+server's seq cursor) splices them into the device islands' experiment.
+The sync demo also runs a StragglerMonitor over simulated heterogeneous
+hardware and prints the per-worker work-scale the driver would apply.
 """
+import argparse
 import time
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (EAConfig, HostBridge, MigrationConfig, PoolClient,
-                        PoolServer, make_trap)
-from repro.core import evolution, island as island_lib, pool as pool_lib
+from repro.core import (AsyncConfig, AsyncHostBridge, EAConfig, HostBridge,
+                        MigrationConfig, PoolClient, PoolServer, make_trap)
+from repro.core import async_migration, evolution, island as island_lib, \
+    pool as pool_lib
 from repro.runtime import StragglerMonitor, grow_islands, shrink_islands
 
 
-def main():
-    problem = make_trap(n_traps=20, l=4)
-    cfg = EAConfig(max_pop=128, min_pop=64, generations_per_epoch=50,
-                   mutation_rate=1.0 / 80)
-    mig = MigrationConfig(pool_capacity=64)
-    rng = jax.random.key(0)
-
-    k, rng = jax.random.split(rng)
-    islands = island_lib.init_islands(k, 8, problem, cfg)
-    pool = pool_lib.pool_init(mig.pool_capacity, problem.genome)
-    mon = StragglerMonitor(threshold=2.0)
-
-    # host side: a REST-semantics PoolServer, two volunteer clients and the
-    # bridge that lets them join the device islands' experiment
-    server = PoolServer(capacity=256, seed=1)
-    volunteers = [PoolClient(server, uuid=100 + i) for i in range(2)]
-    bridge = HostBridge(server, every=1, pull=2)
+def make_volunteers(server, problem, n=2):
+    volunteers = [PoolClient(server, uuid=100 + i) for i in range(n)]
     vol_rng = np.random.default_rng(7)
 
     def volunteer_round():
@@ -59,6 +69,27 @@ def main():
             g[flip] = 1  # volunteers push toward the all-ones optimum
             f = float(problem.evaluate(problem.consts, g[None])[0])
             v.put(g, f)
+
+    return volunteers, volunteer_round
+
+
+def run_sync():
+    problem = make_trap(n_traps=20, l=4)
+    cfg = EAConfig(max_pop=128, min_pop=64, generations_per_epoch=50,
+                   mutation_rate=1.0 / 80)
+    mig = MigrationConfig(pool_capacity=64)
+    rng = jax.random.key(0)
+
+    k, rng = jax.random.split(rng)
+    islands = island_lib.init_islands(k, 8, problem, cfg)
+    pool = pool_lib.pool_init(mig.pool_capacity, problem.genome)
+    mon = StragglerMonitor(threshold=2.0)
+
+    # host side: a REST-semantics PoolServer, two volunteer clients and the
+    # bridge that lets them join the device islands' experiment
+    server = PoolServer(capacity=256, seed=1)
+    volunteers, volunteer_round = make_volunteers(server, problem)
+    bridge = HostBridge(server, every=1, pull=2)
 
     # one jitted step; up/e are traced args so epochs reuse a single compile
     epoch = jax.jit(lambda i, q, kk, up, e: evolution.epoch_step(
@@ -110,6 +141,75 @@ def main():
     for w in speeds:
         print(f"  worker {w}: work_scale={mon2.work_scale(w):.2f} "
               f"{'<- straggler: fewer generations/epoch' if w in mon2.stragglers() else ''}")
+
+
+def run_async(args):
+    """The asynchronous runtime demo: heterogeneous clocks + seeded churn +
+    a non-blocking host bridge, every island at its own pace."""
+    problem = make_trap(n_traps=20, l=4)
+    cfg = EAConfig(max_pop=128, min_pop=64, generations_per_epoch=50,
+                   mutation_rate=1.0 / 80)
+    mig = MigrationConfig(pool_capacity=64, topology=args.topology)
+    acfg = AsyncConfig(min_rate=args.min_rate, max_rate=args.max_rate,
+                       staleness=args.staleness, churn_fraction=args.churn,
+                       seed=args.seed)
+    n, ticks = 8, args.ticks
+    rng = jax.random.key(args.seed)
+    k_init, rng = jax.random.split(rng)
+    islands = island_lib.init_islands(k_init, n, problem, cfg)
+    pool = pool_lib.pool_init(mig.pool_capacity, problem.genome)
+    astate = async_migration.init_async_state(
+        jax.random.fold_in(k_init, 7), n, acfg, ticks, problem.genome)
+    print("volunteer speeds:", np.round(np.asarray(astate.rate), 2))
+    down = [(int(s), int(e)) for s, e in
+            zip(np.asarray(astate.down_start), np.asarray(astate.down_end))
+            if int(s) <= ticks]
+    print(f"churn windows (down..rejoin): {down or 'none'}")
+
+    server = PoolServer(capacity=256, seed=1)
+    volunteers, volunteer_round = make_volunteers(server, problem)
+    bridge = AsyncHostBridge(server, pull=4)
+
+    step = jax.jit(partial(async_migration.async_step, problem=problem,
+                           cfg=cfg, mig=mig, acfg=acfg, w2=False))
+    t = 0
+    for t in range(1, ticks + 1):
+        rng, k = jax.random.split(rng)
+        islands, pool, astate = step(islands, pool, astate, k, tick=t)
+        pool = bridge.sync(pool, t)     # non-blocking: never waits on server
+        volunteer_round()
+        fires = np.asarray(astate.fires)
+        up_now = ~((np.asarray(astate.down_start) <= t)
+                   & (t < np.asarray(astate.down_end)))
+        best = float(islands.best_fitness.max())
+        print(f"tick {t:2d} best={best:5.1f}/40 pool={int(pool.count):2d} "
+              f"alive={int(up_now.sum())}/{n} fires/island={fires.tolist()} "
+              f"bridge={bridge.stats()}")
+        if best >= 40.0:
+            print("solution found — experiment over")
+            break
+    pool = bridge.flush(pool)
+    bridge.close()
+    print(f"total island-epochs fired: {int(np.asarray(astate.fires).sum())} "
+          f"of {n * max(t, 1)} synchronous equivalents; "
+          f"bridge={bridge.stats()}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--runtime", choices=("sync", "async"), default="sync")
+    ap.add_argument("--min-rate", type=float, default=0.25)
+    ap.add_argument("--max-rate", type=float, default=1.0)
+    ap.add_argument("--staleness", type=int, default=3)
+    ap.add_argument("--churn", type=float, default=0.4)
+    ap.add_argument("--topology", default="pool")
+    ap.add_argument("--ticks", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.runtime == "async":
+        run_async(args)
+    else:
+        run_sync()
 
 
 if __name__ == "__main__":

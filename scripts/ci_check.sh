@@ -3,35 +3,30 @@
 #
 #   scripts/ci_check.sh            # from anywhere inside the repo
 #
-# KNOWN_FAILING lists modules with pre-existing jax-version breakage in
-# model/sharding-land (AbstractMesh / pjit API drift — tracked in
-# ROADMAP.md); they are excluded so the gate is strict on everything else.
-# Remove entries as they get fixed.
+# KNOWN_FAILING lists modules with pre-existing breakage excluded from the
+# gate. Currently EMPTY: the jax-0.4.37 API-drift quarantine (AbstractMesh /
+# get_abstract_mesh / set_mesh / shard_map drift) was burned down by the
+# repro.compat shims — the gate is strict on the whole suite. Add entries
+# only with a tracking note in ROADMAP.md.
 #
 # The benchmark smoke runs the pool + migration sections only (fig3/fig4
 # replay paper-scale evolution and roofline needs dry-run artifacts) and
 # leaves BENCH_migration.json behind as the machine-readable throughput
-# record (epochs/sec per registered topology via the fused driver).
+# record: epochs/sec per registered topology via the fused driver, plus the
+# bench_async sync-vs-async-under-churn section (degenerate / heterogeneous
+# / heterogeneous+churn operating points of the async runtime).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}"
 
-KNOWN_FAILING=(
-    tests/test_dryrun_small.py
-    tests/test_models_smoke.py
-    tests/test_moe_ep.py
-    tests/test_optim.py
-    tests/test_serve_consistency.py
-    tests/test_shardings.py
-    tests/test_system.py
-)
+KNOWN_FAILING=()
 
-echo "== tier-1 tests (minus known model-land breakage) =="
-python -m pytest -x -q "${KNOWN_FAILING[@]/#/--ignore=}"
+echo "== tier-1 tests =="
+python -m pytest -x -q ${KNOWN_FAILING[@]+"${KNOWN_FAILING[@]/#/--ignore=}"}
 
-echo "== benchmark smoke (pool + migration) =="
+echo "== benchmark smoke (pool + migration + async) =="
 python -m benchmarks.run --skip fig3 fig4 roofline
 
 echo "ci_check: OK"

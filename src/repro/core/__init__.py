@@ -14,19 +14,23 @@ from .types import (EAConfig, ExperimentStats, GenomeSpec, IslandState,
                     MigrationConfig, PoolState)
 from .problems import (Problem, make_f15, make_onemax, make_problem,
                        make_rastrigin, make_sphere, make_trap)
-from . import ga, island, pool, migration, evolution, sharded
+from . import ga, island, pool, migration, evolution, async_migration, sharded
+from .async_migration import (AsyncConfig, AsyncHostBridge, AsyncState,
+                              run_experiment_async, run_fused_async)
 from .async_pool import PoolClient, PoolServer, PoolUnavailable
 from .evolution import RunResult, run_experiment, run_fused
 from .migration import (HostBridge, available_topologies, get_topology,
                         register_topology)
-from .sharded import run_fused_sharded, run_sharded
+from .sharded import run_fused_sharded, run_fused_sharded_async, run_sharded
 
 __all__ = [
     "EAConfig", "ExperimentStats", "GenomeSpec", "IslandState",
     "MigrationConfig", "PoolState", "Problem", "make_f15", "make_onemax",
     "make_problem", "make_rastrigin", "make_sphere", "make_trap", "ga",
-    "island", "pool", "migration", "evolution", "sharded", "PoolClient",
-    "PoolServer", "PoolUnavailable", "RunResult", "run_experiment",
-    "run_fused", "HostBridge", "available_topologies", "get_topology",
-    "register_topology", "run_fused_sharded", "run_sharded",
+    "island", "pool", "migration", "evolution", "async_migration",
+    "sharded", "PoolClient", "PoolServer", "PoolUnavailable", "RunResult",
+    "run_experiment", "run_fused", "HostBridge", "available_topologies",
+    "get_topology", "register_topology", "run_fused_sharded", "run_sharded",
+    "AsyncConfig", "AsyncHostBridge", "AsyncState", "run_experiment_async",
+    "run_fused_async", "run_fused_sharded_async",
 ]

@@ -37,6 +37,7 @@ class PoolEntry:
     experiment: int
     timestamp: float = field(default_factory=time.time)
     payload: Any = None      # opaque side-data (PBT weights / ckpt path)
+    seq: int = -1            # server-assigned monotone id (exactly-once GETs)
 
 
 class PoolServer:
@@ -60,6 +61,7 @@ class PoolServer:
         self._experiment = 0
         self._n_puts = 0
         self._n_gets = 0
+        self._seq = 0
         self._best: Optional[PoolEntry] = None
         self._journal_path = journal_path
         self._journal = open(journal_path, "a") if journal_path else None
@@ -88,6 +90,8 @@ class PoolServer:
         with self._lock:
             self._check_up()
             self._n_puts += 1
+            entry.seq = self._seq
+            self._seq += 1
             if len(self._entries) >= self._capacity:
                 # ring behaviour: drop the oldest
                 self._entries.pop(0)
@@ -135,6 +139,25 @@ class PoolServer:
             e = self._rng.choice(self._entries)
             self._log({"op": "get", "fitness": e.fitness})
             return e.genome.copy(), e.fitness
+
+    def get_since(self, seq: int, limit: int = 64,
+                  ) -> Tuple[List[PoolEntry], int]:
+        """GET every resident entry with ``entry.seq > seq``, oldest first,
+        capped at ``limit``. Returns ``(entries, cursor)`` where ``cursor``
+        is the highest seq returned (pass it back next call) — the
+        exactly-once drain used by the non-blocking async host bridge:
+        advancing the cursor guarantees no entry is ever served twice to
+        the same consumer, without the server tracking consumers."""
+        self._check_up()
+        with self._lock:
+            self._check_up()
+            self._n_gets += 1
+            fresh = [e for e in self._entries if e.seq > seq][:limit]
+            cursor = fresh[-1].seq if fresh else seq
+            if fresh:
+                self._log({"op": "get_since", "n": len(fresh),
+                           "cursor": cursor})
+            return fresh, cursor
 
     def get_best(self) -> Tuple[np.ndarray, float]:
         self._check_up()

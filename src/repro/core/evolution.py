@@ -80,6 +80,13 @@ def _success_mask(islands: IslandState, problem: Problem,
     return islands.best_fitness >= problem.optimum - cfg.success_eps
 
 
+# Public names for sibling driver modules (core.async_migration rebuilds
+# the epoch from these pieces — sharing them is what makes the degenerate
+# async configuration bit-for-bit equal to this driver).
+bcast_mask = _bcast
+success_mask = _success_mask
+
+
 def collect_stats(islands: IslandState, epoch: Array | int,
                   axis: Optional[str] = None) -> ExperimentStats:
     """Per-epoch record. Under SPMD (``axis`` given, inside shard_map) the

@@ -20,6 +20,25 @@ Both contexts honour the paper's fault-tolerance property: when
 ``available`` is False the pool is left untouched and every immigrant
 fitness is ``-inf`` (a lost XHR — the island continues standalone).
 
+``available`` may also be a *per-island vector* ``(n_local,)`` — the
+asynchronous runtime's fire mask (:mod:`repro.core.async_migration`):
+island ``i`` participates in the exchange this step iff ``available[i]``.
+Vector semantics per topology:
+
+* ``pool`` — only participating islands PUT (masked ``valid`` slots, so
+  the ring pointer advances exactly by the number of firing islands) and
+  only participating islands' GETs are honoured (others read ``-inf``).
+  Both verbs belong to the island's own fire event, the paper's
+  client-at-its-own-pace behaviour.
+* permute/broadcast topologies — non-participating *sources* contribute
+  ``-inf`` (their stale best is not re-emitted), while deliveries to any
+  destination are returned un-masked: the async runtime buffers them in
+  the destination's staleness-bounded inbox and the destination absorbs
+  at its own next fire.
+
+With an all-True vector both reduce bit-for-bit to the scalar ``True``
+path — the async runtime's degenerate-configuration anchor.
+
 Built-in topologies
 -------------------
 ``pool``            all_gather'd PUT/GET pool — the faithful paper
@@ -54,7 +73,8 @@ import numpy as np
 
 from repro.compat import axis_size
 
-from .pool import NEG_INF, pool_best, pool_get_random, pool_put_batch
+from .pool import (NEG_INF, pool_best, pool_get_random, pool_insert_host,
+                   pool_put_batch)
 from .types import Array, MigrationConfig, PoolState
 
 
@@ -67,6 +87,8 @@ class Topology(Protocol):
     Must be pure/jittable, honour ``available=False`` as a no-op (pool
     unchanged, immigrant fitness ``-inf``), and support both ``axis=None``
     (batched) and ``axis=<mesh axis name>`` (inside ``shard_map``).
+    ``available`` may also be a per-island ``(n_local,)`` fire mask — see
+    the module docstring for the vector semantics every built-in follows.
     """
 
     def __call__(self, pool: PoolState, bests_genome: Array,
@@ -125,6 +147,15 @@ def _mask_unavailable(imm_f: Array, available) -> Array:
     return jnp.where(jnp.asarray(available), imm_f, NEG_INF)
 
 
+def _avail_parts(available) -> Tuple[Optional[Array], Optional[Array]]:
+    """Split ``available`` into ``(scalar, vector)`` — exactly one is set.
+
+    Scalar: the sync drivers' whole-step gate. Vector ``(n_local,)``: the
+    async runtime's per-island fire mask (see module docstring)."""
+    a = jnp.asarray(available)
+    return (a, None) if a.ndim == 0 else (None, a)
+
+
 def _grid(n: int) -> Tuple[int, int]:
     """Most-square (rows, cols) factorization of ``n`` (rows <= cols)."""
     r = int(np.sqrt(n))
@@ -147,12 +178,21 @@ def pool_topology(pool: PoolState, bests_genome: Array, bests_fitness: Array,
     same deterministic update to its pool replica (single server semantics
     without the single point of failure)."""
     n_local = bests_genome.shape[0]
-    available = jnp.asarray(available)
+    scalar, vec = _avail_parts(available)
+    put_valid = vec
     if axis is not None:
         bests_genome = jax.lax.all_gather(bests_genome, axis, tiled=True)
         bests_fitness = jax.lax.all_gather(bests_fitness, axis, tiled=True)
-    new_pool = pool_put_batch(pool, bests_genome, bests_fitness)
-    pool = jax.tree.map(lambda a, b: jnp.where(available, a, b), new_pool, pool)
+        if vec is not None:
+            # every replica must apply the same masked PUT
+            put_valid = jax.lax.all_gather(vec, axis, tiled=True)
+    if vec is None:
+        new_pool = pool_put_batch(pool, bests_genome, bests_fitness)
+        pool = jax.tree.map(lambda a, b: jnp.where(scalar, a, b),
+                            new_pool, pool)
+    else:
+        pool = pool_put_batch(pool, bests_genome, bests_fitness,
+                              valid=put_valid)
     if axis is not None:
         # Decorrelate shards: fold the shard index into the key.
         rng = jax.random.fold_in(rng, jax.lax.axis_index(axis))
@@ -172,6 +212,9 @@ def ring_topology(pool: PoolState, bests_genome: Array, bests_fitness: Array,
                   ) -> Tuple[PoolState, Array, Array]:
     """Island/shard ``i`` sends its bests to ``i+1`` (mod n). Each best is
     delivered exactly once; the pool is bypassed (cheap on the wire)."""
+    scalar, vec = _avail_parts(available)
+    if vec is not None:  # async fire mask: silent sources contribute -inf
+        bests_fitness = jnp.where(vec, bests_fitness, NEG_INF)
     if axis is not None:
         n = axis_size(axis)
         perm = [(i, (i + 1) % n) for i in range(n)]
@@ -180,7 +223,9 @@ def ring_topology(pool: PoolState, bests_genome: Array, bests_fitness: Array,
     else:
         imm_g = jnp.roll(bests_genome, 1, axis=0)     # i receives from i-1
         imm_f = jnp.roll(bests_fitness, 1, axis=0)
-    return pool, imm_g, _mask_unavailable(imm_f, available)
+    if vec is not None:   # already source-masked; destinations buffer
+        return pool, imm_g, imm_f
+    return pool, imm_g, _mask_unavailable(imm_f, scalar)
 
 
 # ---------------------------------------------------------------------------
@@ -198,6 +243,9 @@ def torus_topology(pool: PoolState, bests_genome: Array, bests_fitness: Array,
     spreads in both grid dimensions over time. A prime n factors as (1, n):
     the south roll would be a self-delivery no-op, so the grid-degenerate
     case migrates east every epoch (a plain ring)."""
+    scalar, vec = _avail_parts(available)
+    if vec is not None:
+        bests_fitness = jnp.where(vec, bests_fitness, NEG_INF)
     east = jnp.asarray(epoch) % 2 == 0
     if axis is not None:
         n = axis_size(axis)
@@ -207,7 +255,9 @@ def torus_topology(pool: PoolState, bests_genome: Array, bests_fitness: Array,
         if R == 1:
             imm_g = jax.lax.ppermute(bests_genome, axis, perm_e)
             imm_f = jax.lax.ppermute(bests_fitness, axis, perm_e)
-            return pool, imm_g, _mask_unavailable(imm_f, available)
+            if vec is not None:
+                return pool, imm_g, imm_f
+            return pool, imm_g, _mask_unavailable(imm_f, scalar)
         perm_s = [(r * C + c, ((r + 1) % R) * C + c)
                   for r in range(R) for c in range(C)]
         # cond, not where: `east` is replicated so every shard takes the
@@ -232,7 +282,9 @@ def torus_topology(pool: PoolState, bests_genome: Array, bests_fitness: Array,
                              jnp.roll(g, 1, axis=0)).reshape(x.shape)
 
         imm_g, imm_f = _shift(bests_genome), _shift(bests_fitness)
-    return pool, imm_g, _mask_unavailable(imm_f, available)
+    if vec is not None:
+        return pool, imm_g, imm_f
+    return pool, imm_g, _mask_unavailable(imm_f, scalar)
 
 
 # ---------------------------------------------------------------------------
@@ -249,6 +301,9 @@ def random_graph_topology(pool: PoolState, bests_genome: Array,
     island/shard ``i`` receives from ``perm[i]`` where ``perm`` is a seeded
     permutation derived from the (replicated) epoch key — identical on every
     shard, so delivery stays exactly-once without any host coordination."""
+    scalar, vec = _avail_parts(available)
+    if vec is not None:
+        bests_fitness = jnp.where(vec, bests_fitness, NEG_INF)
     if axis is not None:
         n = axis_size(axis)
         perm = jax.random.permutation(rng, n)
@@ -261,7 +316,9 @@ def random_graph_topology(pool: PoolState, bests_genome: Array,
         n = bests_genome.shape[0]
         perm = jax.random.permutation(rng, n)
         imm_g, imm_f = bests_genome[perm], bests_fitness[perm]
-    return pool, imm_g, _mask_unavailable(imm_f, available)
+    if vec is not None:
+        return pool, imm_g, imm_f
+    return pool, imm_g, _mask_unavailable(imm_f, scalar)
 
 
 # ---------------------------------------------------------------------------
@@ -280,6 +337,9 @@ def broadcast_best_topology(pool: PoolState, bests_genome: Array,
     contributes zeros) — one activation-sized all-reduce instead of
     gathering n_total genomes."""
     n_local = bests_fitness.shape[0]
+    scalar, vec = _avail_parts(available)
+    if vec is not None:  # silent islands don't compete for the elite slot
+        bests_fitness = jnp.where(vec, bests_fitness, NEG_INF)
     if axis is not None:
         all_f = jax.lax.all_gather(bests_fitness, axis, tiled=True)
         g = jnp.argmax(all_f)
@@ -293,7 +353,9 @@ def broadcast_best_topology(pool: PoolState, bests_genome: Array,
         elite_g, elite_f = bests_genome[i], bests_fitness[i]
     imm_g = jnp.broadcast_to(elite_g, (n_local,) + elite_g.shape)
     imm_f = jnp.broadcast_to(elite_f, (n_local,))
-    return pool, imm_g, _mask_unavailable(imm_f, available)
+    if vec is not None:
+        return pool, imm_g, imm_f
+    return pool, imm_g, _mask_unavailable(imm_f, scalar)
 
 
 # ---------------------------------------------------------------------------
@@ -362,13 +424,7 @@ class HostBridge:
             genomes.append(np.asarray(g))
             fits.append(float(f))
         if genomes:
-            # callers may hand us a device_get'd (numpy) pool — re-wrap so
-            # pool_put_batch's .at[] updates work either way
-            pool = jax.tree.map(jnp.asarray, pool)
-            pool = pool_put_batch(
-                pool,
-                jnp.asarray(np.stack(genomes), pool.genomes.dtype),
-                jnp.asarray(fits, jnp.float32))
+            pool = pool_insert_host(pool, genomes, fits)
             self.pulled += len(genomes)
         return pool
 

@@ -16,10 +16,11 @@ interconnect; measured against all_gather in §Perf.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .types import Array, GenomeSpec, MigrationConfig, PoolState
 
@@ -93,6 +94,19 @@ def pool_get_random(pool: PoolState, rng: Array) -> Tuple[Array, Array]:
 def pool_best(pool: PoolState) -> Tuple[Array, Array]:
     i = jnp.argmax(pool.fitness)
     return pool.genomes[i], pool.fitness[i]
+
+
+def pool_insert_host(pool: PoolState, genomes: Sequence[np.ndarray],
+                     fits: Sequence[float]) -> PoolState:
+    """Insert host-side entries (e.g. a PoolServer's volunteer
+    contributions, pulled by a sync or async HostBridge) into the device
+    pool. Accepts a ``device_get``'d (numpy) pool — re-wraps it so the
+    ``.at[]`` ring update works either way."""
+    pool = jax.tree.map(jnp.asarray, pool)
+    return pool_put_batch(
+        pool,
+        jnp.asarray(np.stack(list(genomes)), pool.genomes.dtype),
+        jnp.asarray(list(fits), jnp.float32))
 
 
 # ---------------------------------------------------------------------------

@@ -6,7 +6,7 @@ dispatched through the pluggable topology registry (core.migration — pool
 all_gather, ring/torus permutes, random graph, elite broadcast), mirroring
 the paper's server round-trip every ``generations_per_epoch``.
 
-Two drivers:
+Three drivers:
 
 * :func:`run_sharded` — host loop around a jitted shard_map epoch step.
   The host loop is where server failure and the host↔device pool bridge
@@ -14,6 +14,8 @@ Two drivers:
 * :func:`run_fused_sharded` — the whole experiment as one
   ``shard_map(lax.scan)``: donated buffers, per-epoch stats stacked on
   device, a single compile per topology.
+* :func:`run_fused_sharded_async` — the asynchronous per-island-clock
+  runtime (core.async_migration) in the same fused shard_map shape.
 
 Both work on any 1-D mesh ("islands" axis). On the production mesh the same
 step runs with the island axis mapped to ("pod", "data") and fitness
@@ -30,10 +32,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 
+from . import async_migration as async_lib
 from . import evolution as evolution_lib
 from . import island as island_lib
 from . import migration as migration_lib
 from . import pool as pool_lib
+from .async_migration import AsyncConfig, AsyncState
 from .problems import Problem
 from .types import (Array, EAConfig, ExperimentStats, IslandState,
                     MigrationConfig, PoolState)
@@ -69,7 +73,10 @@ def make_sharded_epoch(mesh: Mesh, axis: str, problem: Problem,
 
 def _init_sharded(mesh: Mesh, axis: str, problem: Problem, cfg: EAConfig,
                   mig: MigrationConfig, islands_per_shard: int, rng: Array,
-                  ) -> Tuple[IslandState, PoolState, Array]:
+                  ) -> Tuple[IslandState, PoolState, Array, Array]:
+    """Returns (islands, pool, rng', k_init) — k_init is the key handed to
+    init_islands, so sibling drivers can derive matching per-island state
+    (the async driver folds it into the churn/rate schedule)."""
     n_islands = mesh.shape[axis] * islands_per_shard
     k_init, rng = jax.random.split(rng)
     islands = island_lib.init_islands(k_init, n_islands, problem, cfg)
@@ -80,7 +87,7 @@ def _init_sharded(mesh: Mesh, axis: str, problem: Problem, cfg: EAConfig,
         islands)
     psh = jax.tree.map(
         lambda x: jax.device_put(x, NamedSharding(mesh, P())), pool)
-    return ish, psh, rng
+    return ish, psh, rng, k_init
 
 
 def run_sharded(mesh: Mesh, problem: Problem,
@@ -102,8 +109,8 @@ def run_sharded(mesh: Mesh, problem: Problem,
     between epochs (volunteer clients join the pod's experiment).
     """
     rng = jax.random.key(0) if rng is None else rng
-    ish, psh, rng = _init_sharded(mesh, axis, problem, cfg, mig,
-                                  islands_per_shard, rng)
+    ish, psh, rng, _ = _init_sharded(mesh, axis, problem, cfg, mig,
+                                     islands_per_shard, rng)
     step = make_sharded_epoch(mesh, axis, problem, cfg, mig, w2)
     epoch = 0
     for epoch in range(1, max_epochs + 1):
@@ -137,8 +144,8 @@ def run_fused_sharded(mesh: Mesh, problem: Problem,
     global stats stacked on device (psum/pmax-reduced, replicated).
     Returns ``(islands, pool, epochs)`` (+ stacked stats when asked)."""
     rng = jax.random.key(0) if rng is None else rng
-    ish, psh, rng = _init_sharded(mesh, axis, problem, cfg, mig,
-                                  islands_per_shard, rng)
+    ish, psh, rng, _ = _init_sharded(mesh, axis, problem, cfg, mig,
+                                     islands_per_shard, rng)
     _, k_loop = jax.random.split(rng)
 
     def build():
@@ -166,3 +173,72 @@ def run_fused_sharded(mesh: Mesh, problem: Problem,
     if return_stats:
         return islands, pool, epochs, stats
     return islands, pool, epochs
+
+
+# ---------------------------------------------------------------------------
+# Asynchronous SPMD driver: per-island clocks inside shard_map(lax.scan)
+# ---------------------------------------------------------------------------
+def _astate_spec(axis: str):
+    return AsyncState(*[P(axis)] * len(AsyncState._fields))
+
+
+def run_fused_sharded_async(mesh: Mesh, problem: Problem,
+                            cfg: EAConfig = EAConfig(),
+                            mig: MigrationConfig = MigrationConfig(),
+                            acfg: AsyncConfig = AsyncConfig(),
+                            islands_per_shard: int = 4,
+                            max_ticks: int = 50,
+                            rng: Optional[Array] = None,
+                            w2: bool = False,
+                            axis: str = "islands",
+                            return_stats: bool = False,
+                            return_astate: bool = False):
+    """Asynchronous :func:`run_fused_sharded`: the whole churn-tolerant
+    per-island-clock experiment as one ``shard_map(lax.scan)``. Islands and
+    their :class:`~repro.core.async_migration.AsyncState` (clock, rate,
+    churn window, immigrant inbox) are sharded over ``axis``; the pool is
+    replicated; the per-shard fire mask is the vector availability for the
+    topology collectives. In the degenerate ``acfg`` this is bit-for-bit
+    :func:`run_fused_sharded`."""
+    rng = jax.random.key(0) if rng is None else rng
+    ish, psh, rng, k_init = _init_sharded(mesh, axis, problem, cfg, mig,
+                                          islands_per_shard, rng)
+    _, k_loop = jax.random.split(rng)
+    n_islands = mesh.shape[axis] * islands_per_shard
+    astate = async_lib.init_async_state(
+        jax.random.fold_in(k_init, 7), n_islands, acfg, max_ticks,
+        problem.genome)
+    astate = jax.tree.map(
+        lambda x: jax.device_put(x, NamedSharding(
+            mesh, P(axis, *([None] * (x.ndim - 1))))),
+        astate)
+
+    def build():
+        stats_spec = (ExperimentStats(*[P()] * len(ExperimentStats._fields))
+                      if return_stats else ())
+        fn = shard_map(
+            partial(async_lib.fused_scan_async, problem=problem, cfg=cfg,
+                    mig=mig, acfg=acfg, w2=w2, max_ticks=max_ticks,
+                    axis=axis, with_stats=return_stats),
+            mesh=mesh,
+            in_specs=(_island_spec(axis), _pool_spec(), _astate_spec(axis),
+                      P()),
+            out_specs=(_island_spec(axis), _pool_spec(), _astate_spec(axis),
+                       P(), stats_spec),
+            check=False,
+        )
+        return jax.jit(fn, donate_argnums=(0, 1, 2))
+
+    run = evolution_lib.fused_jit(
+        problem,
+        ("sharded_async", cfg, mig, acfg, w2, max_ticks, axis, mesh,
+         return_stats),
+        build)
+    ish, psh, astate = evolution_lib.unique_buffers((ish, psh, astate))
+    islands, pool, astate, ticks, stats = run(ish, psh, astate, k_loop)
+    out = (islands, pool, ticks)
+    if return_stats:
+        out += (stats,)
+    if return_astate:
+        out += (astate,)
+    return out

@@ -17,17 +17,20 @@ from __future__ import annotations
 
 import argparse
 import time
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, get_config
-from repro.core import (EAConfig, HostBridge, MigrationConfig, PoolServer,
-                        available_topologies, make_problem, run_experiment,
-                        run_fused)
+from repro.core import (AsyncConfig, AsyncHostBridge, EAConfig, HostBridge,
+                        MigrationConfig, PoolServer, available_topologies,
+                        make_problem, run_experiment, run_experiment_async,
+                        run_fused, run_fused_async)
 from repro.core import pbt as pbt_lib
-from repro.core.sharded import run_fused_sharded, run_sharded
+from repro.core.sharded import (run_fused_sharded, run_fused_sharded_async,
+                                run_sharded)
 from repro.data import SyntheticLM
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import TrainState, init_train_state
@@ -38,26 +41,42 @@ from repro.optim import adamw_update
 def run_ea(problem_name: str = "trap", islands: int = 8, epochs: int = 50,
            w2: bool = False, sharded: bool = False, seed: int = 0,
            verbose: bool = True, topology: str = "pool", fused: bool = False,
-           bridge: bool = False, **problem_kwargs):
+           bridge: bool = False, runtime: str = "sync",
+           acfg: AsyncConfig = None, **problem_kwargs):
     """Run the NodIO experiment. ``topology`` selects the registered
     migration strategy, ``fused`` the lax.scan driver (single compile, max
     device throughput), ``bridge`` attaches a host PoolServer through a
-    HostBridge (host-loop drivers only)."""
+    HostBridge (host-loop drivers only). ``runtime='async'`` switches to
+    the asynchronous per-island-clock runtime (core.async_migration):
+    ``acfg`` carries the volunteer-speed / staleness / churn model, and
+    ``bridge`` becomes the non-blocking AsyncHostBridge."""
     problem = make_problem(problem_name, **problem_kwargs)
     cfg = EAConfig()
     mig = MigrationConfig(topology=topology)
-    host_bridge = HostBridge(PoolServer(capacity=256, seed=seed)) \
-        if bridge else None
-    if bridge and fused:
+    is_async = runtime == "async"
+    if acfg is None:
+        acfg = AsyncConfig()
+    if bridge and (fused or (sharded and is_async)):
         print("note: --bridge needs a host loop; the fused lax.scan driver "
-              "runs entirely on device — bridge disabled")
-        host_bridge = None
+              "(incl. the sharded async driver) runs entirely on device — "
+              "bridge disabled")
+        bridge = False
+    server = PoolServer(capacity=256, seed=seed) if bridge else None
+    host_bridge = None
+    if bridge:
+        host_bridge = (AsyncHostBridge(server) if is_async
+                       else HostBridge(server))
     t0 = time.time()
     if sharded:
         mesh = make_host_mesh()
         n_shards = mesh.shape["islands"]
         per = max(1, islands // n_shards)
-        if fused:
+        if is_async:
+            # async sharded is fused-only (one shard_map(lax.scan) driver)
+            isl, pool, ep = run_fused_sharded_async(
+                mesh, problem, cfg, mig, acfg, islands_per_shard=per,
+                max_ticks=epochs, w2=w2, rng=jax.random.key(seed))
+        elif fused:
             isl, pool, ep = run_fused_sharded(
                 mesh, problem, cfg, mig, islands_per_shard=per,
                 max_epochs=epochs, w2=w2, rng=jax.random.key(seed))
@@ -70,26 +89,38 @@ def run_ea(problem_name: str = "trap", islands: int = 8, epochs: int = 50,
         best = float(jax.device_get(isl.best_fitness.max()))
         if verbose:
             print(f"[sharded x{n_shards} {'fused ' if fused else ''}"
-                  f"topo={topology}] best={best} epochs={int(ep)} "
-                  f"({time.time()-t0:.1f}s)")
+                  f"{'async ' if is_async else ''}topo={topology}] "
+                  f"best={best} epochs={int(ep)} ({time.time()-t0:.1f}s)")
         return isl, pool
     if fused:
-        isl, pool, ep = run_fused(problem, cfg, mig, n_islands=islands,
-                                  max_epochs=epochs, w2=w2,
-                                  rng=jax.random.key(seed))
+        run = (partial(run_fused_async, acfg=acfg, max_ticks=epochs)
+               if is_async else partial(run_fused, max_epochs=epochs))
+        isl, pool, ep = run(problem, cfg, mig, n_islands=islands, w2=w2,
+                            rng=jax.random.key(seed))
         if verbose:
             best = float(jax.device_get(isl.best_fitness.max()))
-            print(f"[fused topo={topology}] best={best} epochs={int(ep)} "
-                  f"({time.time()-t0:.1f}s)")
+            print(f"[fused {'async ' if is_async else ''}topo={topology}] "
+                  f"best={best} epochs={int(ep)} ({time.time()-t0:.1f}s)")
         return isl, pool
-    res = run_experiment(problem, cfg, mig, n_islands=islands,
-                         max_epochs=epochs, w2=w2,
-                         rng=jax.random.key(seed), verbose=verbose,
-                         host_bridge=host_bridge)
+    if is_async:
+        res = run_experiment_async(problem, cfg, mig, acfg,
+                                   n_islands=islands, max_ticks=epochs,
+                                   w2=w2, rng=jax.random.key(seed),
+                                   verbose=verbose, host_bridge=host_bridge)
+        if host_bridge is not None:
+            res.pool = host_bridge.flush(res.pool)
+            host_bridge.close()
+    else:
+        res = run_experiment(problem, cfg, mig, n_islands=islands,
+                             max_epochs=epochs, w2=w2,
+                             rng=jax.random.key(seed), verbose=verbose,
+                             host_bridge=host_bridge)
     if verbose:
+        extra = f" fires={res.total_fires}" if is_async else ""
         print(f"success={res.success} evals_to_solution="
               f"{res.evaluations_to_solution} wall={res.wall_time_s:.1f}s"
-              + (f" bridge={host_bridge.stats()}" if host_bridge else ""))
+              + (f" bridge={host_bridge.stats()}" if host_bridge else "")
+              + extra)
     return res
 
 
@@ -154,6 +185,18 @@ def main(argv=None):
                     help="lax.scan fused driver (single compile per topology)")
     ea.add_argument("--bridge", action="store_true",
                     help="sync the device pool with a host PoolServer")
+    ea.add_argument("--runtime", choices=("sync", "async"), default="sync",
+                    help="async = per-island clocks, no epoch barrier "
+                         "(core.async_migration)")
+    ea.add_argument("--min-rate", type=float, default=0.25,
+                    help="slowest volunteer speed (async runtime)")
+    ea.add_argument("--max-rate", type=float, default=1.0,
+                    help="fastest volunteer speed (async runtime)")
+    ea.add_argument("--staleness", type=int, default=3,
+                    help="inbox immigrant lifetime in ticks (async runtime)")
+    ea.add_argument("--churn", type=float, default=0.0,
+                    help="fraction of islands with a seeded down-window "
+                         "(async runtime)")
     pbt = sub.add_parser("pbt")
     pbt.add_argument("--arch", choices=ARCHS, default="minicpm-2b")
     pbt.add_argument("--members", type=int, default=4)
@@ -161,9 +204,12 @@ def main(argv=None):
     pbt.add_argument("--steps-per-epoch", type=int, default=20)
     args = ap.parse_args(argv)
     if args.mode == "ea":
+        acfg = AsyncConfig(min_rate=args.min_rate, max_rate=args.max_rate,
+                           staleness=args.staleness,
+                           churn_fraction=args.churn)
         run_ea(args.problem, args.islands, args.epochs, args.w2,
                args.sharded, topology=args.topology, fused=args.fused,
-               bridge=args.bridge)
+               bridge=args.bridge, runtime=args.runtime, acfg=acfg)
     else:
         run_pbt(args.arch, args.members, args.epochs, args.steps_per_epoch)
 

@@ -233,7 +233,9 @@ def constrain(x, *axes):
     import jax as _jax
     from jax.sharding import NamedSharding as _NS, PartitionSpec as _P
 
-    mesh = _jax.sharding.get_abstract_mesh()
+    from repro.compat import get_abstract_mesh
+
+    mesh = get_abstract_mesh()
     if mesh is None or not mesh.axis_names:
         return x
     spec = []

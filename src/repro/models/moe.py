@@ -67,7 +67,9 @@ def apply(p: Dict, cfg: ModelConfig, x: Array) -> Tuple[Array, Dict[str, Array]]
     shard_map expert-parallel path (local dispatch + one psum/layer);
     otherwise the pjit scatter dispatch (seq-chunked) is used.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.compat import get_abstract_mesh
+
+    mesh = get_abstract_mesh()
     if (USE_EP and mesh is not None
             and {"data", "model"} <= set(mesh.axis_names)
             and cfg.n_experts % mesh.shape["model"] == 0

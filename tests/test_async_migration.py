@@ -1,0 +1,417 @@
+"""Asynchronous per-island migration runtime (core.async_migration).
+
+Properties:
+* degenerate config (uniform rate 1, staleness 0, no churn) is bit-for-bit
+  the synchronous fused driver, for every registered topology, in both the
+  fused and host-loop contexts;
+* the staleness bound is respected by the immigrant inbox;
+* a churned-down island is a complete no-op while dead and rejoins with
+  state intact;
+* the non-blocking AsyncHostBridge delivers each server entry exactly once
+  under async firing;
+* the SPMD context (shard_map on the 8-fake-device mesh) reproduces the
+  sync sharded driver in the degenerate config and runs heterogeneous +
+  churned (subprocess-isolated).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AsyncConfig, AsyncHostBridge, EAConfig,
+                        MigrationConfig, PoolServer, make_onemax, make_trap,
+                        run_experiment, run_experiment_async, run_fused,
+                        run_fused_async)
+from repro.core import island as island_lib, pool as pool_lib
+from repro.core.async_migration import (_inbox_push, _inbox_take,
+                                        async_step, init_async_state)
+from repro.core.pool import NEG_INF
+from repro.core.types import GenomeSpec
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ALL_TOPOLOGIES = ("pool", "ring", "torus", "random_graph", "broadcast_best")
+CFG = EAConfig(max_pop=32, min_pop=16, generations_per_epoch=5,
+               mutation_rate=0.05)
+GEN = GenomeSpec("binary", 8)
+
+
+def _leaves(tree):
+    out = []
+    for x in jax.tree.leaves(tree):
+        if hasattr(x, "dtype") and jax.dtypes.issubdtype(
+                x.dtype, jax.dtypes.prng_key):
+            x = jax.random.key_data(x)
+        out.append(np.asarray(x))
+    return out
+
+
+def assert_trees_equal(a, b):
+    for x, y in zip(_leaves(a), _leaves(b)):
+        np.testing.assert_array_equal(x, y)
+
+
+class TestConfig:
+    def test_degenerate_flag(self):
+        assert AsyncConfig().degenerate
+        assert not AsyncConfig(min_rate=0.5).degenerate
+        assert not AsyncConfig(churn_fraction=0.1).degenerate
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            AsyncConfig(min_rate=0.0)
+        with pytest.raises(ValueError):
+            AsyncConfig(min_rate=0.9, max_rate=0.5)
+        with pytest.raises(ValueError):
+            AsyncConfig(staleness=-1)
+        with pytest.raises(ValueError):
+            AsyncConfig(inbox_capacity=0)
+
+
+class TestSyncEquivalence:
+    """The correctness anchor: degenerate async == sync, bit for bit."""
+
+    @pytest.mark.parametrize("topo", ALL_TOPOLOGIES)
+    def test_fused_bit_for_bit(self, topo):
+        problem = make_onemax(24)
+        mig = MigrationConfig(topology=topo, pool_capacity=8)
+        sync = run_fused(problem, CFG, mig, n_islands=6, max_epochs=4,
+                         rng=jax.random.key(0), w2=True)
+        asyn = run_fused_async(problem, CFG, mig, AsyncConfig(),
+                               n_islands=6, max_ticks=4,
+                               rng=jax.random.key(0), w2=True)
+        assert_trees_equal(sync[:2], asyn[:2])       # islands + pool
+        assert int(sync[2]) == int(asyn[2])          # epochs == ticks
+
+    def test_fused_bit_for_bit_with_early_stop(self):
+        problem = make_onemax(8)                     # solved fast
+        sync = run_fused(problem, CFG, n_islands=4, max_epochs=10,
+                         rng=jax.random.key(2))
+        asyn = run_fused_async(problem, CFG, acfg=AsyncConfig(),
+                               n_islands=4, max_ticks=10,
+                               rng=jax.random.key(2))
+        assert_trees_equal(sync[:2], asyn[:2])
+        assert int(sync[2]) == int(asyn[2]) < 10     # same early stop
+
+    def test_host_loop_bit_for_bit(self):
+        problem = make_onemax(24)
+        mig = MigrationConfig(pool_capacity=8)
+        sync = run_experiment(problem, CFG, mig, n_islands=4, max_epochs=4,
+                              rng=jax.random.key(1), w2=True)
+        asyn = run_experiment_async(problem, CFG, mig, AsyncConfig(),
+                                    n_islands=4, max_ticks=4,
+                                    rng=jax.random.key(1), w2=True)
+        assert_trees_equal((sync.islands, sync.pool),
+                           (asyn.islands, asyn.pool))
+        assert asyn.total_fires == 4 * 4             # everyone, every tick
+
+    def test_host_loop_server_down_matches_sync(self):
+        """A dead pool server is the same lost-XHR no-op in both runtimes."""
+        problem = make_onemax(24)
+        down = lambda e: e not in (2, 3)  # noqa: E731
+        sync = run_experiment(problem, CFG, n_islands=4, max_epochs=4,
+                              rng=jax.random.key(1), w2=True,
+                              server_up=down)
+        asyn = run_experiment_async(problem, CFG, acfg=AsyncConfig(),
+                                    n_islands=4, max_ticks=4,
+                                    rng=jax.random.key(1), w2=True,
+                                    server_up=down)
+        assert_trees_equal((sync.islands, sync.pool),
+                           (asyn.islands, asyn.pool))
+
+
+class TestInboxStaleness:
+    def _astate(self, n=3, cap=4, max_ticks=50, staleness=2):
+        acfg = AsyncConfig(staleness=staleness, inbox_capacity=cap)
+        return init_async_state(jax.random.key(0), n, acfg, max_ticks, GEN)
+
+    def _imm(self, n, fit):
+        g = jnp.ones((n, GEN.length), GEN.dtype)
+        return g, jnp.full((n,), fit, jnp.float32)
+
+    def test_entry_live_until_staleness_then_expires(self):
+        astate = self._astate()
+        g, f = self._imm(3, 5.0)
+        astate = _inbox_push(astate, g, f, jnp.int32(10))
+        absorb = jnp.ones((3,), bool)
+        # age 2 == staleness: still absorbable
+        take_g, take_f, _ = _inbox_take(astate, jnp.int32(12), 2, absorb)
+        assert (np.asarray(take_f) == 5.0).all()
+        # age 3 > staleness: expired
+        _, take_f, _ = _inbox_take(astate, jnp.int32(13), 2, absorb)
+        assert np.isneginf(np.asarray(take_f)).all()
+
+    def test_absorbed_entry_is_consumed(self):
+        astate = self._astate()
+        g, f = self._imm(3, 5.0)
+        astate = _inbox_push(astate, g, f, jnp.int32(10))
+        absorb = jnp.ones((3,), bool)
+        _, take_f, astate = _inbox_take(astate, jnp.int32(10), 2, absorb)
+        assert (np.asarray(take_f) == 5.0).all()
+        _, take_f, _ = _inbox_take(astate, jnp.int32(10), 2, absorb)
+        assert np.isneginf(np.asarray(take_f)).all()   # no double absorb
+
+    def test_best_live_entry_wins(self):
+        astate = self._astate(staleness=5)
+        for fit in (3.0, 9.0, 6.0):
+            g, f = self._imm(3, fit)
+            astate = _inbox_push(astate, g, f, jnp.int32(1))
+        _, take_f, _ = _inbox_take(astate, jnp.int32(2), 5,
+                                   jnp.ones((3,), bool))
+        assert (np.asarray(take_f) == 9.0).all()
+
+    def test_non_absorbing_island_keeps_entries(self):
+        astate = self._astate()
+        g, f = self._imm(3, 5.0)
+        astate = _inbox_push(astate, g, f, jnp.int32(10))
+        absorb = jnp.array([True, False, True])
+        _, take_f, astate = _inbox_take(astate, jnp.int32(10), 2, absorb)
+        assert np.isneginf(np.asarray(take_f)[1])
+        # island 1 can still absorb one tick later (within the bound)
+        _, take_f, _ = _inbox_take(astate, jnp.int32(11), 2,
+                                   jnp.array([False, True, False]))
+        assert np.asarray(take_f)[1] == 5.0
+
+    def test_invalid_immigrants_not_pushed(self):
+        astate = self._astate()
+        g = jnp.zeros((3, GEN.length), GEN.dtype)
+        f = jnp.full((3,), NEG_INF, jnp.float32)
+        out = _inbox_push(astate, g, f, jnp.int32(1))
+        np.testing.assert_array_equal(np.asarray(out.inbox_ptr),
+                                      np.asarray(astate.inbox_ptr))
+        assert np.isneginf(np.asarray(out.inbox_fitness)).all()
+
+
+class TestRatesAndChurn:
+    def _run_steps(self, astate, n, ticks, problem, mig,
+                   acfg, snapshots=False):
+        step = jax.jit(partial(async_step, problem=problem, cfg=CFG,
+                               mig=mig, acfg=acfg, w2=False))
+        islands = island_lib.init_islands(jax.random.key(0), n, problem, CFG)
+        pool = pool_lib.pool_init(mig.pool_capacity, problem.genome)
+        rng = jax.random.key(1)
+        snaps = []
+        for t in range(1, ticks + 1):
+            rng, k = jax.random.split(rng)
+            islands, pool, astate = step(islands, pool, astate, k, tick=t)
+            if snapshots:
+                snaps.append((islands, astate))
+        return islands, pool, astate, snaps
+
+    def test_fire_counts_follow_clocks(self):
+        """fires_i(T) = floor(T * rate_i) — the volunteer-speed model."""
+        problem = make_trap(n_traps=4, l=4)
+        mig = MigrationConfig(topology="ring", pool_capacity=8)
+        acfg = AsyncConfig(min_rate=0.25, max_rate=1.0)
+        n, ticks = 6, 12
+        astate = init_async_state(jax.random.key(3), n, acfg, ticks,
+                                  problem.genome)
+        rate = np.array([1.0, 0.5, 0.25, 1.0, 0.75, 0.3], np.float32)
+        astate = astate._replace(rate=jnp.asarray(rate))
+        _, _, astate, _ = self._run_steps(astate, n, ticks, problem, mig,
+                                          acfg)
+        expect = np.floor(ticks * rate + 1e-5).astype(int)
+        np.testing.assert_array_equal(np.asarray(astate.fires), expect)
+
+    def test_churned_island_is_noop_while_dead_and_rejoins(self):
+        problem = make_trap(n_traps=4, l=4)
+        mig = MigrationConfig(topology="pool", pool_capacity=8)
+        acfg = AsyncConfig()
+        n, ticks = 4, 9
+        astate = init_async_state(jax.random.key(0), n, acfg, ticks,
+                                  problem.genome)
+        # island 0 is down for ticks [3, 6); everyone else never churns
+        astate = astate._replace(
+            down_start=jnp.asarray([3] + [ticks + 1] * 3, jnp.int32),
+            down_end=jnp.asarray([6] + [ticks + 1] * 3, jnp.int32))
+        _, _, _, snaps = self._run_steps(astate, n, ticks, problem, mig,
+                                         acfg, snapshots=True)
+
+        def island0(t):  # 1-based tick -> island 0 leaves
+            isl, ast = snaps[t - 1]
+            return [leaf[0] for leaf in _leaves(isl)], ast
+
+        # frozen exactly from the last pre-down tick through the window
+        ref, ast2 = island0(2)
+        for t in (3, 4, 5):
+            got, ast = island0(t)
+            for a, b in zip(ref, got):
+                np.testing.assert_array_equal(a, b)
+            assert np.asarray(ast.fires)[0] == np.asarray(ast2.fires)[0]
+            assert np.asarray(ast.clock)[0] == np.asarray(ast2.clock)[0]
+        # rejoined: fires and evaluations advance again
+        _, ast_end = island0(ticks)
+        assert np.asarray(ast_end.fires)[0] > np.asarray(ast2.fires)[0]
+        isl_end, _ = snaps[ticks - 1]
+        assert (np.asarray(isl_end.evaluations)[0]
+                > np.asarray(snaps[1][0].evaluations)[0])
+        # the other islands fired every tick throughout
+        assert (np.asarray(ast_end.fires)[1:] == ticks).all()
+
+    def test_dead_island_does_not_pollute_pool(self):
+        """While down, an island neither PUTs nor GETs: with every island
+        down the pool stays empty."""
+        problem = make_trap(n_traps=4, l=4)
+        mig = MigrationConfig(topology="pool", pool_capacity=8)
+        acfg = AsyncConfig()
+        n, ticks = 4, 5
+        astate = init_async_state(jax.random.key(0), n, acfg, ticks,
+                                  problem.genome)
+        astate = astate._replace(
+            down_start=jnp.zeros((n,), jnp.int32),
+            down_end=jnp.full((n,), ticks + 1, jnp.int32))
+        _, pool, astate, _ = self._run_steps(astate, n, ticks, problem, mig,
+                                             acfg)
+        assert int(np.asarray(pool.count)) == 0
+        assert (np.asarray(astate.fires) == 0).all()
+
+    def test_convergence_under_churn(self):
+        """The paper's fault-tolerance claim: the experiment still converges
+        with heterogeneous speeds and churn."""
+        problem = make_onemax(16)
+        acfg = AsyncConfig(min_rate=0.3, max_rate=1.0, staleness=3,
+                           churn_fraction=0.5, seed=2)
+        isl, _, ticks = run_fused_async(problem, CFG,
+                                        MigrationConfig(pool_capacity=8),
+                                        acfg, n_islands=8, max_ticks=60,
+                                        rng=jax.random.key(5))
+        assert float(isl.best_fitness.max()) == 16.0
+        assert int(ticks) < 60                       # actually early-stopped
+
+
+class TestAsyncHostBridge:
+    def test_exactly_once_delivery_under_async_firing(self):
+        """Every volunteer entry reaches the device pool exactly once, no
+        matter how the island clocks interleave the syncs."""
+        server = PoolServer(capacity=256, seed=0)
+        bridge = AsyncHostBridge(server, pull=16, uuid=-7)
+        pool = pool_lib.pool_init(128, GEN)
+        vol_fits = []
+        rng = np.random.default_rng(0)
+        next_fit = 1000.0
+        for tick in range(1, 13):
+            # a volunteer PUTs 0..2 distinct entries between device syncs
+            for _ in range(rng.integers(0, 3)):
+                g = rng.integers(0, 2, GEN.length).astype(np.int8)
+                server.put(g, next_fit, uuid=42)
+                vol_fits.append(next_fit)
+                next_fit += 1.0
+            pool = bridge.sync(pool, tick)
+        pool = bridge.flush(pool)
+        bridge.close()
+        fits = np.asarray(pool.fitness)
+        for f in vol_fits:
+            assert (fits == f).sum() == 1, f"entry {f} delivered != once"
+        assert bridge.pulled == len(vol_fits)
+
+    def test_own_pushes_never_echo(self):
+        server = PoolServer(capacity=64, seed=0)
+        bridge = AsyncHostBridge(server, pull=16, uuid=-7)
+        pool = pool_lib.pool_init(32, GEN)
+        pool = pool_lib.pool_put_batch(
+            pool, jnp.ones((1, GEN.length), GEN.dtype),
+            jnp.asarray([50.0], jnp.float32))
+        for tick in range(1, 6):
+            pool = bridge.sync(pool, tick)
+        pool = bridge.flush(pool)
+        bridge.close()
+        assert bridge.pushed >= 1
+        assert bridge.pulled == 0                     # nothing echoed back
+        assert (np.asarray(pool.fitness) == 50.0).sum() == 1
+
+    def test_server_loss_is_counted_not_raised(self):
+        server = PoolServer(capacity=64, seed=0)
+        server.kill()
+        bridge = AsyncHostBridge(server, pull=4)
+        pool = pool_lib.pool_put_batch(
+            pool_lib.pool_init(8, GEN), jnp.ones((1, GEN.length), GEN.dtype),
+            jnp.asarray([1.0], jnp.float32))
+        before = np.asarray(pool.fitness).copy()
+        pool = bridge.sync(pool, 1)
+        pool = bridge.flush(pool)
+        bridge.close()
+        np.testing.assert_array_equal(np.asarray(pool.fitness), before)
+        assert bridge.lost >= 1
+
+    def test_get_since_cursor_is_exactly_once(self):
+        server = PoolServer(capacity=8, seed=0)
+        for i in range(5):
+            server.put(np.zeros(4), float(i), uuid=1)
+        got1, cur = server.get_since(-1, limit=3)
+        got2, cur = server.get_since(cur, limit=10)
+        got3, cur = server.get_since(cur, limit=10)
+        seqs = [e.seq for e in got1 + got2 + got3]
+        assert len(seqs) == 5 and len(set(seqs)) == 5
+        assert not got3 or len(got1 + got2) == 5
+
+
+SPMD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.core import AsyncConfig, EAConfig, MigrationConfig, make_onemax
+    from repro.core.sharded import run_fused_sharded, run_fused_sharded_async
+    from repro.launch.mesh import make_host_mesh
+
+    def leaves(t):
+        out = []
+        for x in jax.tree.leaves(t):
+            if hasattr(x, "dtype") and jax.dtypes.issubdtype(
+                    x.dtype, jax.dtypes.prng_key):
+                x = jax.random.key_data(x)
+            out.append(np.asarray(x))
+        return out
+
+    mesh = make_host_mesh()
+    cfg = EAConfig(max_pop=32, min_pop=16, generations_per_epoch=3,
+                   mutation_rate=0.05)
+    problem = make_onemax(24)
+    out = {}
+    for topo in ("pool", "ring", "torus", "random_graph", "broadcast_best"):
+        mig = MigrationConfig(topology=topo, pool_capacity=16)
+        sync = run_fused_sharded(mesh, problem, cfg, mig,
+                                 islands_per_shard=2, max_epochs=3,
+                                 rng=jax.random.key(0), w2=True)
+        asyn = run_fused_sharded_async(mesh, problem, cfg, mig,
+                                       AsyncConfig(), islands_per_shard=2,
+                                       max_ticks=3, rng=jax.random.key(0),
+                                       w2=True)
+        out[f"{topo}_degenerate_bit_for_bit"] = all(
+            np.array_equal(a, b)
+            for a, b in zip(leaves(sync[:2]), leaves(asyn[:2])))
+
+    # heterogeneous + churned SPMD run converges and fires heterogeneously
+    acfg = AsyncConfig(min_rate=0.3, max_rate=1.0, staleness=2,
+                       churn_fraction=0.4, seed=1)
+    isl, pool, ticks, astate = run_fused_sharded_async(
+        mesh, problem, cfg, MigrationConfig(topology="ring"), acfg,
+        islands_per_shard=2, max_ticks=12, rng=jax.random.key(3), w2=True,
+        return_astate=True)
+    fires = np.asarray(astate.fires)
+    out["hetero_runs"] = bool(np.isfinite(float(isl.best_fitness.max())))
+    out["hetero_fires_heterogeneous"] = bool(len(set(fires.tolist())) > 1)
+    out["fires_bounded_by_ticks"] = bool((fires <= 12).all())
+    print(json.dumps(out))
+""")
+
+
+def test_spmd_async_runtime():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src")
+               + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", SPMD_SCRIPT], env=env,
+                          cwd=REPO, capture_output=True, text=True,
+                          timeout=1200)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    bad = {k: v for k, v in out.items() if v is not True}
+    assert not bad, f"failed SPMD async properties: {bad}"

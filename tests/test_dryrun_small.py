@@ -22,6 +22,7 @@ SCRIPT = textwrap.dedent("""
     import jax
     import jax.numpy as jnp
     from jax.sharding import NamedSharding
+    from repro.compat import make_mesh, set_mesh
     from repro.configs import get_config
     from repro.launch import shardings as sh
     from repro.launch.dryrun import collective_bytes, cost_of
@@ -32,8 +33,7 @@ SCRIPT = textwrap.dedent("""
     arch = sys.argv[1]
     cfg = get_config(arch, smoke=True)
     model = build_model(cfg)
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     p_shapes = model.abstract_params()
     p_pspecs = sh.tree_pspecs(model.param_axes(), p_shapes, cfg, mesh,
                               "train")
@@ -58,7 +58,7 @@ SCRIPT = textwrap.dedent("""
                                                          100))
     fn = jax.jit(step, in_shardings=(state_shard, bshard),
                  out_shardings=(state_shard, None))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         compiled = fn.lower(state, specs).compile()
     fl, by = cost_of(compiled)
     co = collective_bytes(compiled.as_text())

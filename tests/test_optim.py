@@ -104,10 +104,9 @@ class TestCompression:
         """Compressed cross-pod mean approximates the true mean; error
         feedback captures the residual."""
         import os
-        from jax import shard_map
         from jax.sharding import PartitionSpec as P
-        mesh = jax.make_mesh((1,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import make_mesh, shard_map
+        mesh = make_mesh((1,), ("pod",))
         g = {"w": jax.random.normal(jax.random.key(1), (64,))}
         e = init_error(g)
 
@@ -116,7 +115,7 @@ class TestCompression:
 
         out, err = jax.jit(shard_map(
             f, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
-            check_vma=False))(g, e)
+            check=False))(g, e)
         resid = np.asarray(out["w"]) + np.asarray(err["w"]) \
             - np.asarray(g["w"])
         np.testing.assert_allclose(resid, 0.0, atol=2e-2)
