@@ -71,6 +71,15 @@ def main(argv=None) -> None:
             print(f"async,{r['runtime']},{r['topology']},"
                   f"{r['ticks_per_s']:.2f}_ticks/s,"
                   f"{r['island_epochs_per_s']:.0f}_island_epochs/s")
+        print("== Acceptance policies (policy x topology, diversity) ==")
+        acceptance_rows = pool_throughput.bench_acceptance(
+            islands=32 if args.full else 16,
+            epochs=20 if args.full else 6)
+        for r in acceptance_rows:
+            print(f"acceptance,{r['policy']},{r['topology']},"
+                  f"{r['epochs_per_s']:.2f}_epochs/s,"
+                  f"diversity={r['diversity']:.2f}"
+                  f"({r['diversity_source']})")
         with open(args.migration_json, "w") as fh:
             json.dump({"benchmark": "migration_topologies",
                        "driver": "run_fused[lax.scan]",
@@ -78,7 +87,15 @@ def main(argv=None) -> None:
                        "async_vs_sync_under_churn": {
                            "driver": "run_fused_async[lax.scan"
                                      "+per-island fire mask]",
-                           "rows": async_rows}}, fh, indent=2)
+                           "rows": async_rows},
+                       "bench_acceptance": {
+                           "driver": "run_fused[lax.scan]"
+                                     "+core.acceptance policy",
+                           "diversity_metric": "mean pairwise genome "
+                                               "distance (final pool; "
+                                               "island bests for "
+                                               "pool-bypassing topologies)",
+                           "rows": acceptance_rows}}, fh, indent=2)
         print(f"wrote {args.migration_json}")
         print()
 

@@ -30,6 +30,16 @@ Async runtime (``--runtime async``, core.async_migration) — the paper's
                           closed tab) and later rejoin with state intact.
   --topology NAME         any registered topology; the fire mask rides the
                           vector ``available`` through core.migration.
+  --acceptance NAME       registered immigrant-acceptance policy
+                          (core.acceptance): 'always' is the paper's
+                          accept-every-PUT ring; 'elitist' replaces the
+                          worst resident only when fitter; 'crowding'
+                          replaces the *nearest* resident by genome
+                          distance; 'dedup' rejects epsilon-clones (the
+                          near-identical-elite flood) then falls back to
+                          elitist. The host PoolServer mirrors the same
+                          policy so device and host pools agree.
+  --acceptance-epsilon E  dedup rejection radius (0 = exact clones only).
 
 In both modes a host PoolServer runs alongside with two browser-style
 PoolClient volunteers; a HostBridge (sync) or non-blocking AsyncHostBridge
@@ -46,8 +56,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (AsyncConfig, AsyncHostBridge, EAConfig, HostBridge,
-                        MigrationConfig, PoolClient, PoolServer, make_trap)
+from repro.core import (AcceptanceConfig, AsyncConfig, AsyncHostBridge,
+                        EAConfig, HostBridge, MigrationConfig, PoolClient,
+                        PoolServer, available_acceptance_policies, make_trap)
 from repro.core import async_migration, evolution, island as island_lib, \
     pool as pool_lib
 from repro.runtime import StragglerMonitor, grow_islands, shrink_islands
@@ -149,7 +160,10 @@ def run_async(args):
     problem = make_trap(n_traps=20, l=4)
     cfg = EAConfig(max_pop=128, min_pop=64, generations_per_epoch=50,
                    mutation_rate=1.0 / 80)
-    mig = MigrationConfig(pool_capacity=64, topology=args.topology)
+    acc = AcceptanceConfig(policy=args.acceptance,
+                           epsilon=args.acceptance_epsilon)
+    mig = MigrationConfig(pool_capacity=64, topology=args.topology,
+                          acceptance=acc)
     acfg = AsyncConfig(min_rate=args.min_rate, max_rate=args.max_rate,
                        staleness=args.staleness, churn_fraction=args.churn,
                        seed=args.seed)
@@ -166,9 +180,11 @@ def run_async(args):
             if int(s) <= ticks]
     print(f"churn windows (down..rejoin): {down or 'none'}")
 
-    server = PoolServer(capacity=256, seed=1)
+    # the server mirrors the device acceptance policy (numpy host_accept)
+    server = PoolServer(capacity=256, seed=1,
+                        acceptance=acc if acc.policy != "always" else None)
     volunteers, volunteer_round = make_volunteers(server, problem)
-    bridge = AsyncHostBridge(server, pull=4)
+    bridge = AsyncHostBridge(server, pull=4, acceptance=acc)
 
     step = jax.jit(partial(async_migration.async_step, problem=problem,
                            cfg=cfg, mig=mig, acfg=acfg, w2=False))
@@ -203,6 +219,9 @@ def main():
     ap.add_argument("--staleness", type=int, default=3)
     ap.add_argument("--churn", type=float, default=0.4)
     ap.add_argument("--topology", default="pool")
+    ap.add_argument("--acceptance", default="always",
+                    choices=available_acceptance_policies())
+    ap.add_argument("--acceptance-epsilon", type=float, default=0.0)
     ap.add_argument("--ticks", type=int, default=20)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()

@@ -12,9 +12,12 @@
 # The benchmark smoke runs the pool + migration sections only (fig3/fig4
 # replay paper-scale evolution and roofline needs dry-run artifacts) and
 # leaves BENCH_migration.json behind as the machine-readable throughput
-# record: epochs/sec per registered topology via the fused driver, plus the
+# record: epochs/sec per registered topology via the fused driver, the
 # bench_async sync-vs-async-under-churn section (degenerate / heterogeneous
-# / heterogeneous+churn operating points of the async runtime).
+# / heterogeneous+churn operating points of the async runtime), and the
+# bench_acceptance policy x topology sweep (epochs/sec + mean pairwise
+# pool-distance diversity per acceptance policy) so CI exercises the
+# acceptance engine end-to-end on every run.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -26,7 +29,7 @@ KNOWN_FAILING=()
 echo "== tier-1 tests =="
 python -m pytest -x -q ${KNOWN_FAILING[@]+"${KNOWN_FAILING[@]/#/--ignore=}"}
 
-echo "== benchmark smoke (pool + migration + async) =="
+echo "== benchmark smoke (pool + migration + async + acceptance) =="
 python -m benchmarks.run --skip fig3 fig4 roofline
 
 echo "ci_check: OK"

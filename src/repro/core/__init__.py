@@ -5,16 +5,20 @@ Public API:
     EAConfig, MigrationConfig, IslandState, PoolState
     island.init_islands / island_epoch
     pool.pool_init / migrate_batch / migrate_sharded
+    acceptance.register_policy / AcceptanceConfig (acceptance registry)
     migration.migrate / register_topology / HostBridge (topology registry)
     evolution.run_experiment / run_fused
     sharded.run_sharded / run_fused_sharded
     async_pool.PoolServer / PoolClient
 """
-from .types import (EAConfig, ExperimentStats, GenomeSpec, IslandState,
-                    MigrationConfig, PoolState)
+from .types import (AcceptanceConfig, EAConfig, ExperimentStats, GenomeSpec,
+                    IslandState, MigrationConfig, PoolState)
 from .problems import (Problem, make_f15, make_onemax, make_problem,
                        make_rastrigin, make_sphere, make_trap)
-from . import ga, island, pool, migration, evolution, async_migration, sharded
+from . import (ga, island, pool, acceptance, migration, evolution,
+               async_migration, sharded)
+from .acceptance import (available_policies as available_acceptance_policies,
+                         register_policy as register_acceptance_policy)
 from .async_migration import (AsyncConfig, AsyncHostBridge, AsyncState,
                               run_experiment_async, run_fused_async)
 from .async_pool import PoolClient, PoolServer, PoolUnavailable
@@ -24,11 +28,13 @@ from .migration import (HostBridge, available_topologies, get_topology,
 from .sharded import run_fused_sharded, run_fused_sharded_async, run_sharded
 
 __all__ = [
-    "EAConfig", "ExperimentStats", "GenomeSpec", "IslandState",
-    "MigrationConfig", "PoolState", "Problem", "make_f15", "make_onemax",
-    "make_problem", "make_rastrigin", "make_sphere", "make_trap", "ga",
-    "island", "pool", "migration", "evolution", "async_migration",
-    "sharded", "PoolClient", "PoolServer", "PoolUnavailable", "RunResult",
+    "AcceptanceConfig", "EAConfig", "ExperimentStats", "GenomeSpec",
+    "IslandState", "MigrationConfig", "PoolState", "Problem", "make_f15",
+    "make_onemax", "make_problem", "make_rastrigin", "make_sphere",
+    "make_trap", "ga", "island", "pool", "acceptance", "migration",
+    "evolution", "async_migration", "sharded",
+    "available_acceptance_policies", "register_acceptance_policy",
+    "PoolClient", "PoolServer", "PoolUnavailable", "RunResult",
     "run_experiment", "run_fused", "HostBridge", "available_topologies",
     "get_topology", "register_topology", "run_fused_sharded", "run_sharded",
     "AsyncConfig", "AsyncHostBridge", "AsyncState", "run_experiment_async",

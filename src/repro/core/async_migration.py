@@ -60,6 +60,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import acceptance as acceptance_lib
 from . import island as island_lib
 from . import migration as migration_lib
 from . import pool as pool_lib
@@ -258,6 +259,15 @@ def async_step(islands: IslandState, pool: PoolState, astate: AsyncState,
     # destination's own fire (staleness-bounded)
     astate = _inbox_push(astate, imm_g, imm_f, tick)
     take_g, take_f, astate = _inbox_take(astate, tick, acfg.staleness, fire)
+    # re-gate at absorb: an entry accepted at delivery time may have gone
+    # stale relative to the island's *current* best by its absorb tick.
+    # Deterministic policies make this idempotent, so the degenerate
+    # config (same-tick absorb) stays bit-for-bit the sync driver.
+    acc = getattr(mig, "acceptance", None)
+    if acc is not None and acc.policy != "always":
+        take_f = acceptance_lib.gate_immigrants(
+            islands.best_genome, islands.best_fitness, take_g, take_f,
+            jax.random.fold_in(rng, 0xAB50), acc)
     received = jax.vmap(
         partial(island_lib.receive_immigrant, replace=mig.replace)
     )(islands, take_g, take_f)
@@ -450,16 +460,26 @@ class AsyncHostBridge(migration_lib.HostBridge):
     the device pool at most once, and the bridge's own pushes are never
     echoed back. Server loss is tolerated and counted, like any lost XHR.
 
+    When puts outpace the drain the server's ring eviction can retire
+    entries the cursor never reached; ``get_since`` detects and counts
+    them, and the bridge accumulates the tally in ``self.dropped``
+    (surfaced by :meth:`stats`) — overflow demotes exactly-once to
+    *detected* at-most-once instead of silent loss.
+
     :meth:`flush` blocks until the worker has drained the job queue —
     tests and orderly shutdown only; the driver never needs it.
     """
 
-    def __init__(self, server, pull: int = 4, uuid: int = -1):
-        super().__init__(server, every=1, pull=pull, uuid=uuid)
+    def __init__(self, server, pull: int = 4, uuid: int = -1,
+                 acceptance=None):
+        super().__init__(server, every=1, pull=pull, uuid=uuid,
+                         acceptance=acceptance)
         self._jobs: "queue.Queue" = queue.Queue()
         self._fetched: List[Tuple[np.ndarray, float]] = []
         self._flock = threading.Lock()
         self._last_seq = -1
+        self._absorbs = 0
+        self.dropped = 0
         self._stop = threading.Event()
         self._worker = threading.Thread(target=self._run, daemon=True)
         self._worker.start()
@@ -476,8 +496,9 @@ class AsyncHostBridge(migration_lib.HostBridge):
                 if genome is not None:
                     self.server.put(genome, fitness, uuid=self.uuid)
                     self.pushed += 1
-                entries, self._last_seq = self.server.get_since(
+                entries, self._last_seq, dropped = self.server.get_since(
                     self._last_seq, limit=self.pull)
+                self.dropped += dropped
                 fresh = [(e.genome.copy(), e.fitness) for e in entries
                          if e.uuid != self.uuid]
                 if fresh:
@@ -495,8 +516,11 @@ class AsyncHostBridge(migration_lib.HostBridge):
         with self._flock:
             got, self._fetched = self._fetched, []
         if got:
+            self._absorbs += 1
             pool = pool_lib.pool_insert_host(
-                pool, [g for g, _ in got], [f for _, f in got])
+                pool, [g for g, _ in got], [f for _, f in got],
+                acc=self.acceptance,
+                rng=jax.random.fold_in(jax.random.key(17), self._absorbs))
             self.pulled += len(got)
         return pool
 
@@ -515,6 +539,11 @@ class AsyncHostBridge(migration_lib.HostBridge):
         """Drain the worker, then absorb anything it fetched (blocking)."""
         self._jobs.join()
         return self._absorb_fetched(pool)
+
+    def stats(self):
+        out = super().stats()
+        out["dropped"] = self.dropped
+        return out
 
     def close(self):
         if self._worker.is_alive():

@@ -14,6 +14,7 @@ tests/test_fault.py and examples/volunteer_sim.py).
 """
 from __future__ import annotations
 
+import collections
 import json
 import os
 import random
@@ -23,6 +24,9 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
+
+from . import acceptance as acceptance_lib
+from .types import AcceptanceConfig
 
 
 class PoolUnavailable(ConnectionError):
@@ -49,17 +53,37 @@ class PoolServer:
       GET /best            -> get_best()
       DELETE /experiment   -> reset() (solution found -> next experiment)
       GET /stats           -> stats()
+
+    ``acceptance`` (an :class:`~repro.core.types.AcceptanceConfig`) makes
+    the server apply the same registered immigrant-acceptance policy as
+    the device pools, via the numpy mirror in
+    :func:`repro.core.acceptance.host_accept` — None keeps the paper's
+    accept-every-PUT ring. Rejections are counted in ``stats()['rejected']``
+    and journaled as ``put_rejected``.
     """
 
     def __init__(self, capacity: int = 1024, journal_path: Optional[str] = None,
-                 seed: int = 0):
+                 seed: int = 0,
+                 acceptance: Optional[AcceptanceConfig] = None):
         self._lock = threading.Lock()
         self._capacity = capacity
-        self._entries: List[PoolEntry] = []
+        # deque(maxlen): O(1) ring eviction on the PUT hot path (a plain
+        # list's pop(0) made a full pool quadratic over a run)
+        self._entries: "collections.deque[PoolEntry]" = collections.deque(
+            maxlen=capacity)
+        if acceptance is not None \
+                and acceptance.policy not in acceptance_lib.HOST_MIRRORED:
+            # fail at construction, not on the first PUT mid-run: a
+            # device-only custom policy has no numpy mirror to apply here
+            raise ValueError(
+                f"acceptance policy {acceptance.policy!r} has no host "
+                f"mirror; PoolServer supports {acceptance_lib.HOST_MIRRORED}")
+        self._acceptance = acceptance    # None -> legacy accept-every-PUT
         self._rng = random.Random(seed)
         self._up = True
         self._experiment = 0
         self._n_puts = 0
+        self._n_rejected = 0
         self._n_gets = 0
         self._seq = 0
         self._best: Optional[PoolEntry] = None
@@ -84,18 +108,44 @@ class PoolServer:
             raise PoolUnavailable("pool server is down")
 
     # -- REST verbs ----------------------------------------------------------
+    # Liveness is checked exactly once, *inside* the lock, in every verb:
+    # the old unlocked pre-check duplicated the locked one (a TOCTOU pair),
+    # so a kill()/revive() racing a request could observe two different
+    # answers on one call. One locked check = one consistent behaviour.
     def _put(self, entry: PoolEntry) -> int:
-        """Shared PUT path: ring insert, best tracking, journal. Returns the
-        current experiment number."""
+        """Shared PUT path: acceptance decision (default: legacy ring
+        insert), best tracking, journal. Returns the current experiment
+        number; a policy rejection leaves the pool untouched (counted in
+        stats()['rejected'])."""
         with self._lock:
             self._check_up()
             self._n_puts += 1
+            acc = self._acceptance
+            if acc is None or acc.policy == "always":
+                decision = acceptance_lib.APPEND   # deque maxlen = ring evict
+            else:
+                residents = list(self._entries)
+                # genome matrix only for distance policies — elitist's
+                # argmin(fitness) must not pay an O(capacity x L) copy
+                genomes = (np.stack([e.genome for e in residents])
+                           if residents
+                           and acc.policy in ("crowding", "dedup")
+                           else None)
+                decision = acceptance_lib.host_accept(
+                    genomes,
+                    np.asarray([e.fitness for e in residents]),
+                    entry.genome, entry.fitness, acc, self._capacity)
+            if decision is None:
+                self._n_rejected += 1
+                self._log({"op": "put_rejected", "uuid": entry.uuid,
+                           "fitness": entry.fitness, "exp": self._experiment})
+                return self._experiment
             entry.seq = self._seq
             self._seq += 1
-            if len(self._entries) >= self._capacity:
-                # ring behaviour: drop the oldest
-                self._entries.pop(0)
-            self._entries.append(entry)
+            if decision is acceptance_lib.APPEND:
+                self._entries.append(entry)
+            else:
+                self._entries[decision] = entry
             if self._best is None or entry.fitness > self._best.fitness:
                 self._best = entry
             self._log({"op": "put", "uuid": entry.uuid,
@@ -104,21 +154,18 @@ class PoolServer:
 
     def put(self, genome: Any, fitness: float, uuid: int = 0) -> int:
         """PUT a chromosome. Returns the current experiment number."""
-        self._check_up()
         return self._put(PoolEntry(np.asarray(genome), float(fitness),
                                    int(uuid), self._experiment))
 
     def put_with_payload(self, genome: Any, fitness: float, uuid: int = 0,
                          payload: Any = None) -> int:
         """PUT with opaque side-data (PBT weight snapshots / ckpt paths)."""
-        self._check_up()
         return self._put(PoolEntry(np.asarray(genome), float(fitness),
                                    int(uuid), self._experiment,
                                    payload=payload))
 
     def get_random_entry(self) -> Optional[PoolEntry]:
         """GET a random entry with metadata/payload (None when empty)."""
-        self._check_up()
         with self._lock:
             self._check_up()
             self._n_gets += 1
@@ -130,7 +177,6 @@ class PoolServer:
 
     def get_random(self) -> Tuple[np.ndarray, float]:
         """GET a uniformly random chromosome (paper's migration GET)."""
-        self._check_up()
         with self._lock:
             self._check_up()
             self._n_gets += 1
@@ -141,35 +187,54 @@ class PoolServer:
             return e.genome.copy(), e.fitness
 
     def get_since(self, seq: int, limit: int = 64,
-                  ) -> Tuple[List[PoolEntry], int]:
-        """GET every resident entry with ``entry.seq > seq``, oldest first,
-        capped at ``limit``. Returns ``(entries, cursor)`` where ``cursor``
-        is the highest seq returned (pass it back next call) — the
-        exactly-once drain used by the non-blocking async host bridge:
-        advancing the cursor guarantees no entry is ever served twice to
-        the same consumer, without the server tracking consumers."""
-        self._check_up()
+                  ) -> Tuple[List[PoolEntry], int, int]:
+        """GET every resident entry with ``entry.seq > seq``, lowest seq
+        first, capped at ``limit``. Returns ``(entries, cursor, dropped)``:
+        ``cursor`` is the highest seq the consumer has now covered (pass it
+        back next call) — the exactly-once drain used by the non-blocking
+        async host bridge: advancing the cursor guarantees no entry is ever
+        served twice to the same consumer, without the server tracking
+        consumers.
+
+        ``dropped`` counts the seqs in ``(seq, cursor]`` that are no longer
+        resident — retired before this consumer ever saw them, whether
+        ring-evicted on overflow, replaced by an acceptance policy
+        (including a mid-ring victim whose neighbours survive), or cleared
+        by ``reset``. When puts outpace the drain the old contract
+        silently degraded to at-most-once; now every hole is detected,
+        counted exactly once (the cursor advances past a gap even when
+        nothing is returned), and surfaced so the bridge can report it."""
         with self._lock:
             self._check_up()
             self._n_gets += 1
-            fresh = [e for e in self._entries if e.seq > seq][:limit]
-            cursor = fresh[-1].seq if fresh else seq
+            fresh = sorted((e for e in self._entries if e.seq > seq),
+                           key=lambda e: e.seq)[:limit]
             if fresh:
+                # every resident seq in (seq, cursor] is in fresh (the
+                # limit cuts from the top), so the holes are countable
+                cursor = fresh[-1].seq
+                dropped = (cursor - seq) - len(fresh)
+            else:
+                # nothing resident beyond seq: every later-assigned seq
+                # is gone — cover them all so the gap is charged once
+                cursor = max(seq, self._seq - 1)
+                dropped = cursor - seq
+            if fresh or dropped:
                 self._log({"op": "get_since", "n": len(fresh),
-                           "cursor": cursor})
-            return fresh, cursor
+                           "cursor": cursor, "dropped": dropped})
+            return fresh, cursor, dropped
 
     def get_best(self) -> Tuple[np.ndarray, float]:
-        self._check_up()
         with self._lock:
+            self._check_up()
             if self._best is None:
                 raise PoolUnavailable("pool is empty")
             return self._best.genome.copy(), self._best.fitness
 
     def reset(self) -> int:
         """Solution found: clear the pool, bump the experiment counter."""
-        self._check_up()
         with self._lock:
+            self._check_up()
             self._entries.clear()
             self._best = None
             self._experiment += 1
@@ -184,6 +249,7 @@ class PoolServer:
                 "capacity": self._capacity,
                 "experiment": self._experiment,
                 "puts": self._n_puts,
+                "rejected": self._n_rejected,
                 "gets": self._n_gets,
                 "best_fitness": None if self._best is None else self._best.fitness,
             }

@@ -73,9 +73,10 @@ import numpy as np
 
 from repro.compat import axis_size
 
+from . import acceptance as acceptance_lib
 from .pool import (NEG_INF, pool_best, pool_get_random, pool_insert_host,
                    pool_put_batch)
-from .types import Array, MigrationConfig, PoolState
+from .types import AcceptanceConfig, Array, MigrationConfig, PoolState
 
 
 # ---------------------------------------------------------------------------
@@ -137,10 +138,27 @@ def migrate(pool: PoolState, bests_genome: Array, bests_fitness: Array,
             rng: Array, mig: MigrationConfig, *, axis: Optional[str] = None,
             epoch: Array | int = 0, available: Array | bool = True,
             ) -> Tuple[PoolState, Array, Array]:
-    """Dispatch one migration step through the registered topology."""
+    """Dispatch one migration step through the registered topology, then
+    gate the deliveries through the acceptance engine.
+
+    Every topology's immigrants — pool GETs and permute/broadcast
+    deliveries alike — pass the per-destination-island receive gate
+    (:func:`repro.core.acceptance.gate_immigrants`): each island runs
+    ``mig.acceptance`` against its own current best and rejected
+    deliveries read ``-inf``. The ``always`` policy skips the gate
+    entirely (bit-for-bit legacy behaviour). The pool topology's PUT side
+    additionally dispatches the same policy against the shared pool
+    residents (see :func:`pool_topology`)."""
     topo = get_topology(resolve_topology_name(mig))
-    return topo(pool, bests_genome, bests_fitness, rng, mig=mig, axis=axis,
-                epoch=epoch, available=available)
+    pool, imm_g, imm_f = topo(pool, bests_genome, bests_fitness, rng,
+                              mig=mig, axis=axis, epoch=epoch,
+                              available=available)
+    acc = getattr(mig, "acceptance", None)
+    if acc is not None and acc.policy != "always":
+        imm_f = acceptance_lib.gate_immigrants(
+            bests_genome, bests_fitness, imm_g, imm_f,
+            jax.random.fold_in(rng, 0x5EED), acc)
+    return pool, imm_g, imm_f
 
 
 def _mask_unavailable(imm_f: Array, available) -> Array:
@@ -176,9 +194,14 @@ def pool_topology(pool: PoolState, bests_genome: Array, bests_fitness: Array,
     """PUT all bests into the replicated pool, GET one random immigrant per
     island. SPMD: contributions are all_gather'd so every shard applies the
     same deterministic update to its pool replica (single server semantics
-    without the single point of failure)."""
+    without the single point of failure). The PUT dispatches
+    ``mig.acceptance`` against the pool residents — the policy sees the
+    all_gather'd candidates and valid mask with a pre-shard-fold key, so
+    every replica makes the identical slot decisions."""
     n_local = bests_genome.shape[0]
     scalar, vec = _avail_parts(available)
+    acc = getattr(mig, "acceptance", None)
+    k_put = jax.random.fold_in(rng, 0xACC)   # replicated: derived pre-fold
     put_valid = vec
     if axis is not None:
         bests_genome = jax.lax.all_gather(bests_genome, axis, tiled=True)
@@ -187,12 +210,13 @@ def pool_topology(pool: PoolState, bests_genome: Array, bests_fitness: Array,
             # every replica must apply the same masked PUT
             put_valid = jax.lax.all_gather(vec, axis, tiled=True)
     if vec is None:
-        new_pool = pool_put_batch(pool, bests_genome, bests_fitness)
+        new_pool = pool_put_batch(pool, bests_genome, bests_fitness,
+                                  acc=acc, rng=k_put)
         pool = jax.tree.map(lambda a, b: jnp.where(scalar, a, b),
                             new_pool, pool)
     else:
         pool = pool_put_batch(pool, bests_genome, bests_fitness,
-                              valid=put_valid)
+                              valid=put_valid, acc=acc, rng=k_put)
     if axis is not None:
         # Decorrelate shards: fold the shard index into the key.
         rng = jax.random.fold_in(rng, jax.lax.axis_index(axis))
@@ -375,16 +399,23 @@ class HostBridge:
 
     Server loss is tolerated exactly like a browser client's lost XHR:
     ``sync`` swallows :class:`PoolUnavailable` and counts the loss.
+
+    ``acceptance`` selects the policy the *device* pool applies to pulled
+    server entries (core.acceptance); pair it with a PoolServer built with
+    the same :class:`~repro.core.types.AcceptanceConfig` so both sides of
+    the bridge make the same replacement decisions.
     """
 
     def __init__(self, server, every: int = 1, pull: int = 4,
-                 uuid: int = -1):
+                 uuid: int = -1,
+                 acceptance: Optional[AcceptanceConfig] = None):
         if every < 1:
             raise ValueError("every must be >= 1")
         self.server = server
         self.every = every
         self.pull = pull
         self.uuid = uuid
+        self.acceptance = acceptance
         self.pushed = 0
         self.pulled = 0
         self.lost = 0
@@ -424,7 +455,10 @@ class HostBridge:
             genomes.append(np.asarray(g))
             fits.append(float(f))
         if genomes:
-            pool = pool_insert_host(pool, genomes, fits)
+            pool = pool_insert_host(pool, genomes, fits,
+                                    acc=self.acceptance,
+                                    rng=jax.random.fold_in(
+                                        jax.random.key(17), epoch))
             self.pulled += len(genomes)
         return pool
 

@@ -22,9 +22,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .types import Array, GenomeSpec, MigrationConfig, PoolState
+from . import acceptance as acceptance_lib
+from .types import (AcceptanceConfig, Array, GenomeSpec, MigrationConfig,
+                    PoolState)
 
 NEG_INF = jnp.float32(-jnp.inf)
+
+_ALWAYS = AcceptanceConfig()
 
 
 def pool_init(capacity: int, genome: GenomeSpec) -> PoolState:
@@ -46,40 +50,20 @@ def pool_reset(pool: PoolState) -> PoolState:
 
 
 def pool_put_batch(pool: PoolState, genomes: Array, fitness: Array,
-                   valid: Optional[Array] = None) -> PoolState:
-    """Insert k entries at the ring pointer. ``valid`` masks out entries
-    (e.g. islands whose PUT was lost); invalid entries do not advance slots.
+                   valid: Optional[Array] = None,
+                   acc: Optional[AcceptanceConfig] = None,
+                   rng: Optional[Array] = None) -> PoolState:
+    """Insert k entries through the acceptance engine (core.acceptance).
+    ``valid`` masks out entries (e.g. islands whose PUT was lost); invalid
+    entries never take a slot. ``acc`` selects the registered acceptance
+    policy (default: 'always', the legacy ring insert — slots advance from
+    the ring pointer exactly as before the engine existed); ``rng`` feeds
+    stochastic custom policies (built-ins ignore it).
 
     Deterministic given inputs — safe to replay identically on every shard.
     """
-    k = genomes.shape[0]
-    cap = pool.genomes.shape[0]
-    if valid is None:
-        valid = jnp.ones((k,), bool)
-    if k > cap:
-        # More writers than slots (many islands, small pool): keep the best
-        # ``cap`` valid entries — deterministic, replica-consistent.
-        score = jnp.where(valid, fitness, NEG_INF)
-        _, top = jax.lax.top_k(score, cap)
-        genomes, fitness, valid = genomes[top], fitness[top], valid[top]
-        k = cap
-    # Compact valid entries to the front so slots advance densely.
-    order = jnp.argsort(~valid, stable=True)          # valid first
-    genomes, fitness = genomes[order], fitness[order]
-    n_valid = valid.sum().astype(jnp.int32)
-    slots = (pool.ptr + jnp.arange(k, dtype=jnp.int32)) % cap
-    write = jnp.arange(k) < n_valid
-    # Scatter only the valid prefix; invalid rows rewrite their own old value.
-    safe_slots = jnp.where(write, slots, cap)         # cap = drop (out of range)
-    new_genomes = pool.genomes.at[safe_slots].set(
-        genomes.astype(pool.genomes.dtype), mode="drop")
-    new_fitness = pool.fitness.at[safe_slots].set(fitness, mode="drop")
-    return PoolState(
-        genomes=new_genomes,
-        fitness=new_fitness,
-        ptr=(pool.ptr + n_valid) % cap,
-        count=jnp.minimum(pool.count + n_valid, cap),
-    )
+    return acceptance_lib.apply_policy(pool, genomes, fitness, valid, rng,
+                                       acc if acc is not None else _ALWAYS)
 
 
 def pool_get_random(pool: PoolState, rng: Array) -> Tuple[Array, Array]:
@@ -97,16 +81,19 @@ def pool_best(pool: PoolState) -> Tuple[Array, Array]:
 
 
 def pool_insert_host(pool: PoolState, genomes: Sequence[np.ndarray],
-                     fits: Sequence[float]) -> PoolState:
+                     fits: Sequence[float],
+                     acc: Optional[AcceptanceConfig] = None,
+                     rng: Optional[Array] = None) -> PoolState:
     """Insert host-side entries (e.g. a PoolServer's volunteer
     contributions, pulled by a sync or async HostBridge) into the device
-    pool. Accepts a ``device_get``'d (numpy) pool — re-wraps it so the
-    ``.at[]`` ring update works either way."""
+    pool through the acceptance engine. Accepts a ``device_get``'d (numpy)
+    pool — re-wraps it so the ``.at[]`` update works either way."""
     pool = jax.tree.map(jnp.asarray, pool)
     return pool_put_batch(
         pool,
         jnp.asarray(np.stack(list(genomes)), pool.genomes.dtype),
-        jnp.asarray(list(fits), jnp.float32))
+        jnp.asarray(list(fits), jnp.float32),
+        acc=acc, rng=rng)
 
 
 # ---------------------------------------------------------------------------

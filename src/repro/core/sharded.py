@@ -6,6 +6,14 @@ dispatched through the pluggable topology registry (core.migration — pool
 all_gather, ring/torus permutes, random graph, elite broadcast), mirroring
 the paper's server round-trip every ``generations_per_epoch``.
 
+Immigrant acceptance (``MigrationConfig.acceptance`` -> core.acceptance)
+is replica-deterministic by construction under SPMD: the pool topology's
+PUT policy runs on the all_gather'd candidates + all_gather'd valid/fire
+mask with a pre-shard-fold key, so every shard computes the identical slot
+assignment for its pool replica; the per-island receive gate is
+collective-free and purely local. No driver below needs topology- or
+policy-specific code — ``mig`` carries both axes as static config.
+
 Three drivers:
 
 * :func:`run_sharded` — host loop around a jitted shard_map epoch step.

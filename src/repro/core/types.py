@@ -74,6 +74,39 @@ class EAConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class AcceptanceConfig:
+    """Immigrant-acceptance policy — *which* candidates enter a pool, and
+    which resident each one replaces (core.acceptance registry).
+
+    The paper's server accepts every PUT, which drives the pool toward
+    premature convergence as volunteers flood it with near-identical
+    elites; the registered policies make replacement a pluggable strategy
+    (the fourth orthogonal engine axis: topology x driver x runtime x
+    acceptance).
+
+    policy:  registered acceptance policy (core.acceptance): 'always'
+             (legacy ring insert — the bit-for-bit correctness anchor) |
+             'elitist' (replace-worst-if-better) | 'crowding' (replace the
+             nearest resident by genome distance, deterministic tie-break)
+             | 'dedup' (reject candidates within ``epsilon`` of a resident,
+             then elitist) | any custom registration.
+    epsilon: rejection radius for 'dedup' (0.0 = exact duplicates only).
+    metric:  genome distance: 'hamming' | 'l2' | 'auto' (hamming for
+             integer genomes, L2 for float).
+    """
+
+    policy: str = "always"
+    epsilon: float = 0.0
+    metric: str = "auto"
+
+    def __post_init__(self):
+        if self.epsilon < 0.0:
+            raise ValueError("epsilon must be >= 0")
+        if self.metric not in ("auto", "hamming", "l2"):
+            raise ValueError(f"unknown metric {self.metric!r}")
+
+
+@dataclasses.dataclass(frozen=True)
 class MigrationConfig:
     """Pool/migration policy — the paper's PUT(best)/GET(random) cycle."""
 
@@ -89,6 +122,10 @@ class MigrationConfig:
     # None = unset: resolves to the legacy ``collective`` mapping ('ring' ->
     # ring), else 'pool'.
     topology: Optional[str] = None
+    # Immigrant-acceptance policy (core.acceptance): dispatched by every
+    # pool insert (device PUT, host-bridge absorb) and, for policies other
+    # than 'always', as a per-island gate on migration deliveries.
+    acceptance: AcceptanceConfig = AcceptanceConfig()
 
 
 # ---------------------------------------------------------------------------

@@ -24,8 +24,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, get_config
-from repro.core import (AsyncConfig, AsyncHostBridge, EAConfig, HostBridge,
-                        MigrationConfig, PoolServer, available_topologies,
+from repro.core import (AcceptanceConfig, AsyncConfig, AsyncHostBridge,
+                        EAConfig, HostBridge, MigrationConfig, PoolServer,
+                        available_acceptance_policies, available_topologies,
                         make_problem, run_experiment, run_experiment_async,
                         run_fused, run_fused_async)
 from repro.core import pbt as pbt_lib
@@ -42,17 +43,23 @@ def run_ea(problem_name: str = "trap", islands: int = 8, epochs: int = 50,
            w2: bool = False, sharded: bool = False, seed: int = 0,
            verbose: bool = True, topology: str = "pool", fused: bool = False,
            bridge: bool = False, runtime: str = "sync",
-           acfg: AsyncConfig = None, **problem_kwargs):
+           acfg: AsyncConfig = None, acceptance: str = "always",
+           acceptance_epsilon: float = 0.0, **problem_kwargs):
     """Run the NodIO experiment. ``topology`` selects the registered
     migration strategy, ``fused`` the lax.scan driver (single compile, max
     device throughput), ``bridge`` attaches a host PoolServer through a
     HostBridge (host-loop drivers only). ``runtime='async'`` switches to
     the asynchronous per-island-clock runtime (core.async_migration):
     ``acfg`` carries the volunteer-speed / staleness / churn model, and
-    ``bridge`` becomes the non-blocking AsyncHostBridge."""
+    ``bridge`` becomes the non-blocking AsyncHostBridge. ``acceptance``
+    selects the registered immigrant-acceptance policy (core.acceptance)
+    applied by every pool insert and migration delivery —
+    ``acceptance_epsilon`` is the 'dedup' rejection radius; the bridged
+    PoolServer mirrors the same policy so host and device pools agree."""
     problem = make_problem(problem_name, **problem_kwargs)
     cfg = EAConfig()
-    mig = MigrationConfig(topology=topology)
+    acc = AcceptanceConfig(policy=acceptance, epsilon=acceptance_epsilon)
+    mig = MigrationConfig(topology=topology, acceptance=acc)
     is_async = runtime == "async"
     if acfg is None:
         acfg = AsyncConfig()
@@ -61,11 +68,13 @@ def run_ea(problem_name: str = "trap", islands: int = 8, epochs: int = 50,
               "(incl. the sharded async driver) runs entirely on device — "
               "bridge disabled")
         bridge = False
-    server = PoolServer(capacity=256, seed=seed) if bridge else None
+    server = PoolServer(capacity=256, seed=seed,
+                        acceptance=acc if acceptance != "always" else None
+                        ) if bridge else None
     host_bridge = None
     if bridge:
-        host_bridge = (AsyncHostBridge(server) if is_async
-                       else HostBridge(server))
+        host_bridge = (AsyncHostBridge(server, acceptance=acc) if is_async
+                       else HostBridge(server, acceptance=acc))
     t0 = time.time()
     if sharded:
         mesh = make_host_mesh()
@@ -197,6 +206,17 @@ def main(argv=None):
     ea.add_argument("--churn", type=float, default=0.0,
                     help="fraction of islands with a seeded down-window "
                          "(async runtime)")
+    ea.add_argument("--acceptance", default="always",
+                    choices=available_acceptance_policies(),
+                    help="registered immigrant-acceptance policy "
+                         "(core.acceptance): always = the paper's "
+                         "accept-every-PUT ring; elitist = replace worst "
+                         "if better; crowding = replace nearest by genome "
+                         "distance; dedup = reject epsilon-duplicates "
+                         "then elitist")
+    ea.add_argument("--acceptance-epsilon", type=float, default=0.0,
+                    help="dedup rejection radius (genome distance; 0 = "
+                         "exact duplicates only)")
     pbt = sub.add_parser("pbt")
     pbt.add_argument("--arch", choices=ARCHS, default="minicpm-2b")
     pbt.add_argument("--members", type=int, default=4)
@@ -209,7 +229,9 @@ def main(argv=None):
                            churn_fraction=args.churn)
         run_ea(args.problem, args.islands, args.epochs, args.w2,
                args.sharded, topology=args.topology, fused=args.fused,
-               bridge=args.bridge, runtime=args.runtime, acfg=acfg)
+               bridge=args.bridge, runtime=args.runtime, acfg=acfg,
+               acceptance=args.acceptance,
+               acceptance_epsilon=args.acceptance_epsilon)
     else:
         run_pbt(args.arch, args.members, args.epochs, args.steps_per_epoch)
 

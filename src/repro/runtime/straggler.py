@@ -25,8 +25,15 @@ class StragglerMonitor:
     def start(self, worker: int) -> None:
         self._open[worker] = time.perf_counter()
 
-    def stop(self, worker: int) -> float:
-        dt = time.perf_counter() - self._open.pop(worker)
+    def stop(self, worker: int) -> Optional[float]:
+        """Close the worker's open epoch and record its duration. A stop
+        without a matching start (a worker that churned mid-epoch and
+        re-announced itself) is a no-op returning None — it must not crash
+        the driver loop."""
+        t0 = self._open.pop(worker, None)
+        if t0 is None:
+            return None
+        dt = time.perf_counter() - t0
         self._hist[worker].append(dt)
         return dt
 

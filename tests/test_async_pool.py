@@ -1,10 +1,12 @@
-"""Host PoolServer: REST semantics, thread safety, failure injection."""
+"""Host PoolServer: REST semantics, thread safety, failure injection,
+overflow-drop detection, O(1) ring eviction, acceptance-policy mirror."""
 import threading
 
 import numpy as np
 import pytest
 
 from repro.core.async_pool import PoolClient, PoolServer, PoolUnavailable
+from repro.core.types import AcceptanceConfig
 
 
 class TestPoolServer:
@@ -87,6 +89,190 @@ class TestPoolServer:
         st = s.stats()
         assert st["puts"] == 8 * 200
         assert st["size"] == 128
+
+
+class TestGetSinceOverflow:
+    def test_eviction_gap_is_detected_and_counted(self):
+        """Capacity overflow between drains: the evicted seqs are reported
+        as dropped, not silently skipped (exactly-once -> *detected*
+        at-most-once)."""
+        s = PoolServer(capacity=3)
+        for i in range(10):
+            s.put(np.array([i]), float(i))
+        fresh, cur, dropped = s.get_since(-1, limit=64)
+        assert dropped == 7                     # seqs 0..6 evicted unseen
+        assert [e.seq for e in fresh] == [7, 8, 9]
+        assert cur == 9
+        # the gap is charged exactly once
+        fresh, cur, dropped = s.get_since(cur, limit=64)
+        assert fresh == [] and dropped == 0 and cur == 9
+
+    def test_cursor_advances_past_gap_even_when_empty(self):
+        s = PoolServer(capacity=2)
+        for i in range(6):
+            s.put(np.array([i]), float(i))
+        # consumer saw nothing; everything resident is beyond the gap
+        _, cur, dropped = s.get_since(-1, limit=64)
+        assert dropped == 4 and cur == 5
+        s.reset()                               # clears residents
+        fresh, cur, dropped = s.get_since(cur, limit=64)
+        assert fresh == [] and dropped == 0
+        s.put(np.array([9]), 9.0)
+        fresh, cur2, dropped = s.get_since(cur, limit=64)
+        assert [e.seq for e in fresh] == [6] and dropped == 0
+
+    def test_reset_gap_counts_as_dropped(self):
+        s = PoolServer(capacity=8)
+        for i in range(3):
+            s.put(np.array([i]), float(i))
+        s.reset()
+        _, cur, dropped = s.get_since(-1, limit=64)
+        assert dropped == 3 and cur == 2        # cleared before the drain
+
+    def test_limit_truncation_never_skips_seqs(self):
+        s = PoolServer(capacity=8)
+        for i in range(6):
+            s.put(np.array([i]), float(i))
+        seen = []
+        cur = -1
+        for _ in range(4):
+            fresh, cur, dropped = s.get_since(cur, limit=2)
+            assert dropped == 0
+            seen += [e.seq for e in fresh]
+        assert seen == [0, 1, 2, 3, 4, 5]
+
+    def test_partial_overlap_of_gap_and_cursor(self):
+        """Entries the consumer already saw don't count as dropped when
+        they are later evicted."""
+        s = PoolServer(capacity=4)
+        for i in range(4):
+            s.put(np.array([i]), float(i))
+        _, cur, dropped = s.get_since(-1, limit=64)
+        assert cur == 3 and dropped == 0
+        for i in range(4, 10):                  # evicts 0..5; 2,3 were seen
+            s.put(np.array([i]), float(i))
+        fresh, cur, dropped = s.get_since(cur, limit=64)
+        assert dropped == 2                     # only unseen 4, 5
+        assert [e.seq for e in fresh] == [6, 7, 8, 9]
+
+
+class TestEviction:
+    def test_ring_preserves_insertion_order(self):
+        s = PoolServer(capacity=3)
+        for i in range(7):
+            s.put(np.array([i]), float(i))
+        assert [e.seq for e in s._entries] == [4, 5, 6]
+        assert s.stats()["size"] == 3
+
+    def test_put_flood_is_linear_not_quadratic(self):
+        """deque(maxlen) eviction: a 20k-put flood at full capacity stays
+        fast (the old list.pop(0) path was O(capacity) per PUT)."""
+        import time
+        s = PoolServer(capacity=4096)
+        g = np.zeros(16, np.int8)
+        for i in range(4096):
+            s.put(g, float(i))
+        t0 = time.perf_counter()
+        for i in range(20_000):
+            s.put(g, float(i))
+        dt = time.perf_counter() - t0
+        assert s.stats()["size"] == 4096
+        assert dt < 5.0                         # generous CI headroom
+
+
+class TestAcceptanceMirror:
+    def test_elitist_keeps_best_and_counts_rejections(self):
+        s = PoolServer(capacity=2,
+                       acceptance=AcceptanceConfig(policy="elitist"))
+        s.put(np.zeros(4, np.int8), 5.0)
+        s.put(np.ones(4, np.int8), 6.0)
+        s.put(np.ones(4, np.int8), 1.0)          # full, worse -> rejected
+        s.put(np.ones(4, np.int8), 9.0)          # replaces the 5.0
+        st = s.stats()
+        assert st["size"] == 2 and st["rejected"] == 1
+        assert sorted(e.fitness for e in s._entries) == [6.0, 9.0]
+
+    def test_dedup_rejects_clones_even_when_not_full(self):
+        acc = AcceptanceConfig(policy="dedup", epsilon=0.0)
+        s = PoolServer(capacity=8, acceptance=acc)
+        g = np.array([1, 0, 1, 0], np.int8)
+        s.put(g, 5.0)
+        s.put(g.copy(), 9.0)                     # exact clone -> rejected
+        assert s.stats()["size"] == 1
+        assert s.stats()["rejected"] == 1
+        s.put(np.array([1, 0, 1, 1], np.int8), 9.0)
+        assert s.stats()["size"] == 2
+
+    def test_replacement_drop_is_visible_to_get_since(self):
+        """An entry replaced by the acceptance policy before the consumer
+        drained it counts as dropped."""
+        s = PoolServer(capacity=1,
+                       acceptance=AcceptanceConfig(policy="elitist"))
+        s.put(np.zeros(2, np.int8), 1.0)         # seq 0
+        s.put(np.ones(2, np.int8), 2.0)          # seq 1 replaces seq 0
+        fresh, cur, dropped = s.get_since(-1, limit=8)
+        assert dropped == 1 and [e.seq for e in fresh] == [1]
+
+    def test_mid_ring_replacement_drop_is_detected(self):
+        """A replaced victim that is *not* the oldest resident leaves a
+        hole between surviving seqs — it must still be counted."""
+        s = PoolServer(capacity=2,
+                       acceptance=AcceptanceConfig(policy="elitist"))
+        s.put(np.zeros(2, np.int8), 5.0)         # seq 0
+        s.put(np.ones(2, np.int8), 1.0)          # seq 1 (now full)
+        s.put(np.ones(2, np.int8), 3.0)          # seq 2 replaces seq 1
+        fresh, cur, dropped = s.get_since(-1, limit=8)
+        assert [e.seq for e in fresh] == [0, 2]
+        assert cur == 2 and dropped == 1         # seq 1 vanished mid-ring
+        _, _, dropped = s.get_since(cur, limit=8)
+        assert dropped == 0                      # charged exactly once
+
+    def test_unmirrored_policy_rejected_at_construction(self):
+        """A device-only custom policy must fail fast, not KeyError on the
+        first PUT mid-run."""
+        with pytest.raises(ValueError, match="no host mirror"):
+            PoolServer(acceptance=AcceptanceConfig(policy="my_custom"))
+
+
+class TestKillReviveRace:
+    def test_single_locked_liveness_check(self):
+        """kill()/revive() racing a request hammer must never produce
+        anything but a clean result or PoolUnavailable — the TOCTOU pair
+        (unlocked pre-check + locked check) is gone, so there is exactly
+        one consistent liveness decision per verb."""
+        s = PoolServer(capacity=64)
+        s.put(np.zeros(2, np.int8), 1.0)
+        errors = []
+        stop = threading.Event()
+
+        def toggler():
+            while not stop.is_set():
+                s.kill()
+                s.revive()
+
+        def hammer(uid):
+            for i in range(500):
+                try:
+                    s.put(np.array([uid, i], np.int32), float(i), uuid=uid)
+                    s.get_random()
+                    s.get_since(-1, limit=2)
+                    s.get_best()
+                except PoolUnavailable:
+                    pass
+                except Exception as e:  # noqa: BLE001
+                    errors.append(e)
+
+        t = threading.Thread(target=toggler)
+        workers = [threading.Thread(target=hammer, args=(u,))
+                   for u in range(4)]
+        t.start()
+        for w in workers:
+            w.start()
+        for w in workers:
+            w.join()
+        stop.set()
+        t.join()
+        assert not errors
 
 
 class TestPoolClient:

@@ -99,6 +99,20 @@ class TestStraggler:
                 mon.record(w, 1.0)
         assert mon.stragglers() == []
 
+    def test_stop_without_start_is_noop(self):
+        """A worker that churned mid-epoch (stop with no open start) must
+        not crash the driver loop — None, no history entry."""
+        mon = StragglerMonitor()
+        assert mon.stop(3) is None
+        assert 3 not in mon._hist or not mon._hist[3]
+        # and the normal start/stop path still records
+        mon.start(3)
+        dt = mon.stop(3)
+        assert dt is not None and dt >= 0.0
+        assert len(mon._hist[3]) == 1
+        # double-stop after a consumed start is again a no-op
+        assert mon.stop(3) is None
+
 
 class TestPBT:
     def _controller(self, pool=None):
