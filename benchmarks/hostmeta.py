@@ -1,0 +1,35 @@
+"""Host/backend metadata stamped into every BENCH_*.json.
+
+The paper's speed tables are meaningless without the hardware row ("on an
+i7-4770", "Chrome 46 on..."); ours are too. ``stamp(payload)`` attaches a
+``host`` block so every machine-readable benchmark artifact records the
+jax version, backend, device kind and platform it was measured on.
+"""
+from __future__ import annotations
+
+import os
+import platform
+import time
+from typing import Any, Dict
+
+
+def host_metadata() -> Dict[str, Any]:
+    import jax
+
+    dev = jax.devices()[0]
+    return {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": getattr(dev, "device_kind", str(dev)),
+        "device_count": jax.device_count(),
+        "platform": platform.platform(),
+        "python_version": platform.python_version(),
+        "cpu_count": os.cpu_count(),
+    }
+
+
+def stamp(payload: Dict[str, Any]) -> Dict[str, Any]:
+    """Attach the host block (in place) and return ``payload``."""
+    payload["host"] = host_metadata()
+    return payload

@@ -16,10 +16,16 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale settings (50 trap runs etc.)")
     ap.add_argument("--skip", nargs="*", default=[],
-                    choices=["fig3", "fig4", "pool", "migration", "roofline"])
+                    choices=["fig3", "fig4", "pool", "migration", "speed",
+                             "roofline"])
     ap.add_argument("--migration-json", default="BENCH_migration.json",
                     help="machine-readable per-topology throughput output")
+    ap.add_argument("--speed-json", default="BENCH_speed.json",
+                    help="machine-readable speed-baseline output "
+                         "(evals/sec + time-to-solution per problem x "
+                         "genome length x generation-engine impl)")
     args = ap.parse_args(argv)
+    from benchmarks import hostmeta
     t0 = time.time()
 
     if "fig3" not in args.skip:
@@ -81,7 +87,8 @@ def main(argv=None) -> None:
                   f"diversity={r['diversity']:.2f}"
                   f"({r['diversity_source']})")
         with open(args.migration_json, "w") as fh:
-            json.dump({"benchmark": "migration_topologies",
+            json.dump(hostmeta.stamp(
+                      {"benchmark": "migration_topologies",
                        "driver": "run_fused[lax.scan]",
                        "rows": rows,
                        "async_vs_sync_under_churn": {
@@ -95,8 +102,20 @@ def main(argv=None) -> None:
                                                "distance (final pool; "
                                                "island bests for "
                                                "pool-bypassing topologies)",
-                           "rows": acceptance_rows}}, fh, indent=2)
+                           "rows": acceptance_rows}}), fh, indent=2)
         print(f"wrote {args.migration_json}")
+        print()
+
+    if "speed" not in args.skip:
+        print("== Speed baseline (evals/sec, jnp vs pallas generation "
+              "engine) ==")
+        from benchmarks import speed_baseline
+        speed_rows = speed_baseline.run(full=args.full, verbose=False)
+        print("\n".join(speed_baseline.summarize(speed_rows)))
+        with open(args.speed_json, "w") as fh:
+            json.dump(hostmeta.stamp(speed_baseline.payload(speed_rows)),
+                      fh, indent=2)
+        print(f"wrote {args.speed_json}")
         print()
 
     if "roofline" not in args.skip:

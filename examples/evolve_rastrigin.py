@@ -2,9 +2,35 @@
 F15: shifted, group-rotated Rastrigin) — reduced dimension for CPU demo.
 
     PYTHONPATH=src python examples/evolve_rastrigin.py [--dim 100]
+    PYTHONPATH=src python examples/evolve_rastrigin.py --impl pallas
 
 Shows the float-genome path: BLX crossover + gaussian mutation, pool
 migration, fitness = -F15 (maximized; 0 is the global optimum at x = o).
+
+``--impl`` selects the generation-operator engine (the fifth engine axis,
+``EAConfig.impl`` -> repro.kernels.ga registry):
+
+* ``jnp``    — the classic four-op jax.random path (default);
+* ``pallas`` — the fused selection->crossover->mutation megakernel with
+  on-chip counter RNG (VMEM-resident genome tiles; interpret-mode
+  emulation off-TPU, so on CPU expect *slower* — the knob demonstrates
+  engine-swap transparency, the TPU is where it pays);
+* ``pallas_ref`` — the megakernel's pure-jnp oracle (same random stream
+  as 'pallas'; bit-exact against it in interpret mode).
+
+To *measure* the engines against each other, run the paper-style speed
+harness::
+
+    PYTHONPATH=src python -m benchmarks.speed_baseline [--full]
+
+which writes ``BENCH_speed.json``. How to read it: each row is one
+(problem x genome_length x impl) cell; ``evals_per_sec`` is the
+cross-language throughput metric of the source paper's tables (mean over
+seeded runs, compile excluded by a warm-up run), ``success_rate`` /
+``time_to_solution_s`` / ``evals_to_solution`` are the Fig-3-style
+to-solution metrics, and the top-level ``host`` block (jax version,
+backend, device kind) says what hardware the numbers belong to —
+compare rows only within a matching host block.
 """
 import argparse
 
@@ -19,13 +45,16 @@ def main():
     ap.add_argument("--group", type=int, default=10)
     ap.add_argument("--epochs", type=int, default=40)
     ap.add_argument("--islands", type=int, default=8)
+    ap.add_argument("--impl", default="jnp",
+                    choices=["jnp", "pallas", "pallas_ref"],
+                    help="generation-operator engine (see module docstring)")
     args = ap.parse_args()
 
     problem = make_f15(jax.random.key(7), dim=args.dim, group=args.group)
     cfg = EAConfig(max_pop=256, min_pop=128, generations_per_epoch=50,
                    crossover="blend", mutation_rate=4.0 / args.dim,
                    mutation_sigma=0.5, tournament_k=3,
-                   max_evaluations=20_000_000)
+                   max_evaluations=20_000_000, impl=args.impl)
     result = run_experiment(problem, cfg, MigrationConfig(),
                             n_islands=args.islands, max_epochs=args.epochs,
                             rng=jax.random.key(1), verbose=True,
@@ -33,7 +62,7 @@ def main():
     best = float(result.islands.best_fitness.max())
     print(f"\nbest F15 value reached: {-best:.4f} (0 = global optimum)")
     print(f"evaluations: {result.evaluations:,} "
-          f"wall: {result.wall_time_s:.1f}s")
+          f"wall: {result.wall_time_s:.1f}s (impl={args.impl})")
 
 
 if __name__ == "__main__":

@@ -9,15 +9,19 @@
 # repro.compat shims — the gate is strict on the whole suite. Add entries
 # only with a tracking note in ROADMAP.md.
 #
-# The benchmark smoke runs the pool + migration sections only (fig3/fig4
-# replay paper-scale evolution and roofline needs dry-run artifacts) and
-# leaves BENCH_migration.json behind as the machine-readable throughput
-# record: epochs/sec per registered topology via the fused driver, the
-# bench_async sync-vs-async-under-churn section (degenerate / heterogeneous
-# / heterogeneous+churn operating points of the async runtime), and the
-# bench_acceptance policy x topology sweep (epochs/sec + mean pairwise
-# pool-distance diversity per acceptance policy) so CI exercises the
-# acceptance engine end-to-end on every run.
+# The benchmark smoke runs the pool + migration + speed sections only
+# (fig3/fig4 replay paper-scale evolution and roofline needs dry-run
+# artifacts) and leaves two machine-readable records behind:
+#   BENCH_migration.json — epochs/sec per registered topology via the
+#     fused driver, the bench_async sync-vs-async-under-churn section,
+#     and the bench_acceptance policy x topology sweep;
+#   BENCH_speed.json — the paper-style speed baseline (evals/sec +
+#     time-to-solution per problem x genome length x generation-engine
+#     impl, jnp vs pallas), two scenarios in smoke trim.
+# Both carry a "host" block (jax version/backend/device) so numbers are
+# attributable. The GA kernel smoke below proves the fused generation
+# megakernel (interpret mode) bit-exact against its jnp oracle before any
+# benchmark touches it.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -29,7 +33,34 @@ KNOWN_FAILING=()
 echo "== tier-1 tests =="
 python -m pytest -x -q ${KNOWN_FAILING[@]+"${KNOWN_FAILING[@]/#/--ignore=}"}
 
-echo "== benchmark smoke (pool + migration + async + acceptance) =="
+echo "== GA generation-kernel interpret smoke (pallas vs jnp oracle) =="
+python - <<'PY'
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import EAConfig, make_rastrigin, make_trap
+from repro.kernels import ga as gk
+
+for problem, cx in ((make_trap(n_traps=8, l=4), "two_point"),
+                    (make_rastrigin(dim=16), "blend")):
+    cfg = EAConfig(max_pop=32, min_pop=16, crossover=cx)
+    pop = problem.init_population(jax.random.key(0), 32)
+    fit = problem.evaluate(problem.consts, pop)
+    args = (jax.random.key(1), pop, fit, jnp.int32(24), cfg, problem.genome)
+    got = gk.generation(*args, interpret=True)
+    want = gk.generation_ref(*args)
+    if problem.genome.kind == "binary":
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    else:
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-6)
+    gp, gf = gk.generation_eval(*args, problem.fused, interpret=True)
+    np.testing.assert_allclose(np.asarray(gf),
+                               np.asarray(problem.evaluate(problem.consts,
+                                                           gp)),
+                               rtol=1e-5, atol=1e-4)
+    print(f"  {problem.name}: generation + fused-eval parity OK")
+PY
+
+echo "== benchmark smoke (pool + migration + async + acceptance + speed) =="
 python -m benchmarks.run --skip fig3 fig4 roofline
 
 echo "ci_check: OK"

@@ -14,7 +14,8 @@ Public API:
 from .types import (AcceptanceConfig, EAConfig, ExperimentStats, GenomeSpec,
                     IslandState, MigrationConfig, PoolState)
 from .problems import (Problem, make_f15, make_onemax, make_problem,
-                       make_rastrigin, make_sphere, make_trap)
+                       make_rastrigin, make_royal_road, make_sphere,
+                       make_trap)
 from . import (ga, island, pool, acceptance, migration, evolution,
                async_migration, sharded)
 from .acceptance import (available_policies as available_acceptance_policies,
@@ -30,8 +31,9 @@ from .sharded import run_fused_sharded, run_fused_sharded_async, run_sharded
 __all__ = [
     "AcceptanceConfig", "EAConfig", "ExperimentStats", "GenomeSpec",
     "IslandState", "MigrationConfig", "PoolState", "Problem", "make_f15",
-    "make_onemax", "make_problem", "make_rastrigin", "make_sphere",
-    "make_trap", "ga", "island", "pool", "acceptance", "migration",
+    "make_onemax", "make_problem", "make_rastrigin", "make_royal_road",
+    "make_sphere", "make_trap", "ga", "island", "pool", "acceptance",
+    "migration",
     "evolution", "async_migration", "sharded",
     "available_acceptance_policies", "register_acceptance_policy",
     "PoolClient", "PoolServer", "PoolUnavailable", "RunResult",

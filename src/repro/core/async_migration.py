@@ -30,6 +30,12 @@ the same SPMD program:
   :func:`repro.core.migration.migrate` with the per-island fire mask as
   the vector ``available`` — all five registered topologies (and any
   custom one honouring the vector contract) work asynchronously.
+* **Generation-engine transparency.** The autonomous phase evolves through
+  ``island_epoch`` -> ``ga.next_generation``, i.e. through the operator
+  registry (``EAConfig.impl``): non-firing islands stay inert under the
+  fused Pallas megakernel exactly as under the jnp path (the fire mask
+  selects *states*, not ops — masked islands' kernel outputs are computed
+  and discarded, the SPMD-native dense encoding).
 
 **Correctness anchor:** in the degenerate configuration (all rates 1.0,
 ``staleness`` 0, no churn) every island fires every tick and the runtime

@@ -17,6 +17,11 @@ Both operate on a *batch* of islands (leading axis) and support the W²
 variant: restart-on-solution + heterogeneous population sizes. Migration
 is dispatched through the pluggable topology registry
 (:mod:`repro.core.migration` — selected by ``MigrationConfig.topology``).
+The per-generation hot path inside every epoch dispatches through the
+operator-kernel registry (:mod:`repro.kernels.ga` — selected by
+``EAConfig.impl``): since ``cfg`` is a static jit argument, each impl
+(classic jnp / fused Pallas megakernel / its oracle) gets its own compiled
+driver via ``fused_jit`` with no driver-side branching.
 """
 from __future__ import annotations
 

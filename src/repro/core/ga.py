@@ -5,6 +5,11 @@ randomness comes from explicitly split PRNG keys. Selection only ever draws
 parent *indices* in ``[0, pop_size)`` so padded lanes (>= pop_size) are never
 selected — they are still written each generation (fixed SPMD lanes) but are
 invisible to the algorithm (fitness forced to -inf).
+
+``next_generation`` is the dispatch point of the generation-operator engine
+(``EAConfig.impl``): the classic jnp path below is the ``'jnp'`` impl; any
+other impl resolves a kernel from the ``repro.kernels.ga`` registry (the
+fused Pallas megakernel and its counter-RNG jnp oracle ship built in).
 """
 from __future__ import annotations
 
@@ -35,13 +40,23 @@ def tournament_select(rng: Array, fitness: Array, pop_size: Array, n: int,
     return cand[jnp.arange(n), jnp.argmax(cf, axis=1)]
 
 
-def roulette_select(rng: Array, fitness: Array, pop_size: Array, n: int) -> Array:
-    """Fitness-proportional selection (shifted to positives, masked)."""
+def roulette_logits(fitness: Array, pop_size: Array) -> Array:
+    """Log-weights for fitness-proportional selection (shifted to
+    positives). Invalid lanes get *exactly* ``-inf`` — the old
+    ``log(w + 1e-30)`` formulation gave padded lanes a tiny but nonzero
+    logit, i.e. a nonzero selection probability."""
     masked = mask_fitness(fitness, pop_size)
-    finite = jnp.where(jnp.isfinite(masked), masked, 0.0)
-    lo = jnp.min(jnp.where(jnp.isfinite(masked), masked, jnp.inf))
-    w = jnp.where(jnp.isfinite(masked), finite - lo + 1e-6, 0.0)
-    return jax.random.categorical(rng, jnp.log(w + 1e-30), shape=(n,))
+    valid = jnp.isfinite(masked)
+    finite = jnp.where(valid, masked, 0.0)
+    lo = jnp.min(jnp.where(valid, masked, jnp.inf))
+    w = jnp.where(valid, finite - lo + 1e-6, 1.0)  # valid lanes: w >= 1e-6
+    return jnp.where(valid, jnp.log(w), NEG_INF)
+
+
+def roulette_select(rng: Array, fitness: Array, pop_size: Array, n: int) -> Array:
+    """Fitness-proportional selection (masked: padded lanes unselectable)."""
+    return jax.random.categorical(rng, roulette_logits(fitness, pop_size),
+                                  shape=(n,))
 
 
 def select(rng: Array, fitness: Array, pop_size: Array, n: int,
@@ -123,7 +138,24 @@ def next_generation(rng: Array, pop: Array, fitness: Array, pop_size: Array,
     Layout: slots [0, elite) hold the elite (best of the *valid* lanes),
     slots [elite, max_pop) hold fresh children. Lanes >= pop_size are
     computed but algorithmically inert.
+
+    Dispatches on ``cfg.impl``: 'jnp' runs the classic path below;
+    anything else resolves a registered generation kernel from the
+    operator registry (repro.kernels.ga — e.g. the fused Pallas
+    megakernel for 'pallas', its jnp oracle for 'pallas_ref').
     """
+    if cfg.impl != "jnp":
+        from repro.kernels.ga import get_kernel  # deferred: core<->kernels
+
+        kern = get_kernel("generation", genome.kind, cfg.impl)
+        return kern(rng, pop, fitness, pop_size, cfg, genome)
+    return next_generation_jnp(rng, pop, fitness, pop_size, cfg, genome)
+
+
+def next_generation_jnp(rng: Array, pop: Array, fitness: Array,
+                        pop_size: Array, cfg: EAConfig,
+                        genome: GenomeSpec) -> Array:
+    """The classic jnp generation (the ``impl='jnp'`` registry entry)."""
     n = pop.shape[0]
     masked = mask_fitness(fitness, pop_size)
     k_sa, k_sb, k_cx, k_mut = jax.random.split(rng, 4)

@@ -59,15 +59,36 @@ def _success(best: Array, problem: Problem, cfg: EAConfig) -> Array:
     return best >= problem.optimum - cfg.success_eps
 
 
+def _fused_generation_kernel(problem: Problem, cfg: EAConfig):
+    """Resolve a fused generation+evaluation kernel for this (problem, cfg)
+    if one is registered — the megakernel path that keeps the new
+    population in VMEM through its fitness evaluation. ``None`` means
+    evolve-then-evaluate separately (the 'jnp' impl, or no fusable spec)."""
+    if cfg.impl == "jnp" or problem.fused is None:
+        return None
+    from repro.kernels.ga import get_kernel, has_kernel  # deferred import
+
+    if not has_kernel("generation_eval", problem.genome.kind, cfg.impl):
+        return None
+    return get_kernel("generation_eval", problem.genome.kind, cfg.impl)
+
+
 def generation_step(state: IslandState, problem: Problem,
                     cfg: EAConfig) -> IslandState:
     """One GA generation. Frozen (done) islands are passed through untouched
     so a vmapped batch with early finishers charges no phantom evaluations."""
     rng, k_gen = jax.random.split(state.rng)
-    new_pop = ga.next_generation(k_gen, state.pop, state.fitness,
-                                 state.pop_size, cfg, problem.genome)
-    new_fit = ga.mask_fitness(problem.evaluate(problem.consts, new_pop),
-                              state.pop_size)
+    fused = _fused_generation_kernel(problem, cfg)
+    if fused is not None:
+        new_pop, raw_fit = fused(k_gen, state.pop, state.fitness,
+                                 state.pop_size, cfg, problem.genome,
+                                 problem.fused)
+        new_fit = ga.mask_fitness(raw_fit, state.pop_size)
+    else:
+        new_pop = ga.next_generation(k_gen, state.pop, state.fitness,
+                                     state.pop_size, cfg, problem.genome)
+        new_fit = ga.mask_fitness(problem.evaluate(problem.consts, new_pop),
+                                  state.pop_size)
     best_i = jnp.argmax(new_fit)
     improved = new_fit[best_i] > state.best_fitness
     best_fitness = jnp.where(improved, new_fit[best_i], state.best_fitness)

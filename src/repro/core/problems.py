@@ -36,6 +36,13 @@ class Problem:
 
     evaluate(consts, pop) -> (n,) float32 fitness for pop of shape (n, L).
     ``optimum`` (if known) enables success detection at fitness >= optimum-eps.
+    ``fused`` (optional) is a static spec dict (python scalars only, e.g.
+    ``{"eval": "trap", "a": 1.0, ...}``) advertising that this problem's
+    fitness can be folded into a registered ``generation_eval`` megakernel
+    (repro.kernels.ga) — under ``EAConfig(impl='pallas')`` the drivers then
+    evolve *and* evaluate in one VMEM-resident kernel. Problems with large
+    array consts (e.g. F15's rotation stack) leave it ``None`` and keep
+    evaluation in ``evaluate``.
     """
 
     name: str
@@ -43,6 +50,8 @@ class Problem:
     evaluate: Callable[[Any, Array], Array] = dataclasses.field(compare=False)
     consts: Any = dataclasses.field(default=None, compare=False)
     optimum: Optional[float] = None
+    fused: Optional[Dict[str, Any]] = dataclasses.field(default=None,
+                                                        compare=False)
 
     def init_population(self, rng: Array, n: int) -> Array:
         g = self.genome
@@ -84,6 +93,7 @@ def make_trap(n_traps: int = 40, l: int = 4, a: float = 1.0, b: float = 2.0,
         evaluate=evaluate,
         consts=consts,
         optimum=n_traps * b,
+        fused=dict(consts, eval="trap"),
     )
 
 
@@ -100,6 +110,32 @@ def make_onemax(length: int = 128) -> Problem:
         evaluate=evaluate,
         consts=None,
         optimum=float(length),
+        fused={"eval": "onemax"},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Royal Road (Mitchell/Forrest/Holland R1 — paper-family integer workload)
+# ---------------------------------------------------------------------------
+def royal_road_fitness_ref(consts: Dict[str, int], pop: Array) -> Array:
+    """R1 royal road: the genome is ``n_blocks`` schemata of ``r`` bits;
+    each fully-set block contributes ``r``. pop: (n, n_blocks*r) int8 ->
+    (n,) f32. A plateau-heavy deceptive-free complement to the trap."""
+    r = consts["r"]
+    n = pop.shape[0]
+    u = pop.reshape(n, -1, r).astype(jnp.float32).sum(-1)
+    return jnp.float32(r) * (u >= r - 0.5).astype(jnp.float32).sum(-1)
+
+
+def make_royal_road(n_blocks: int = 16, r: int = 8) -> Problem:
+    consts = {"r": int(r)}
+    return Problem(
+        name=f"royalroad{n_blocks}x{r}",
+        genome=GenomeSpec("binary", n_blocks * r),
+        evaluate=royal_road_fitness_ref,
+        consts=consts,
+        optimum=float(n_blocks * r),
+        fused={"eval": "royal_road", "r": int(r)},
     )
 
 
@@ -121,6 +157,7 @@ def make_rastrigin(dim: int = 20, bound: float = 5.12) -> Problem:
         evaluate=evaluate,
         consts=None,
         optimum=0.0,
+        fused={"eval": "rastrigin"},
     )
 
 
@@ -195,6 +232,7 @@ def make_sphere(dim: int = 30, bound: float = 5.12) -> Problem:
         evaluate=evaluate,
         consts=None,
         optimum=0.0,
+        fused={"eval": "sphere"},
     )
 
 
@@ -204,6 +242,7 @@ def make_sphere(dim: int = 30, bound: float = 5.12) -> Problem:
 _REGISTRY: Dict[str, Callable[..., Problem]] = {
     "trap": make_trap,
     "onemax": make_onemax,
+    "royal_road": make_royal_road,
     "rastrigin": make_rastrigin,
     "f15": make_f15,
     "sphere": make_sphere,

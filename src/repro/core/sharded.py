@@ -6,6 +6,11 @@ dispatched through the pluggable topology registry (core.migration — pool
 all_gather, ring/torus permutes, random graph, elite broadcast), mirroring
 the paper's server round-trip every ``generations_per_epoch``.
 
+The generation operator (``EAConfig.impl`` -> repro.kernels.ga registry)
+is shard-local compute with no collectives, so the fused Pallas megakernel
+runs unchanged inside ``shard_map`` — each shard's island slab evolves in
+its own VMEM tiles and only migration crosses devices.
+
 Immigrant acceptance (``MigrationConfig.acceptance`` -> core.acceptance)
 is replica-deterministic by construction under SPMD: the pool topology's
 PUT policy runs on the all_gather'd candidates + all_gather'd valid/fire

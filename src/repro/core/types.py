@@ -54,7 +54,19 @@ class GenomeSpec:
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class EAConfig:
-    """Configuration of the per-island 'Classic' NodEO-style GA."""
+    """Configuration of the per-island 'Classic' NodEO-style GA.
+
+    ``impl`` selects the generation-operator implementation — the fifth
+    engine axis (repro.kernels.ga registry): 'jnp' (the classic four-op
+    jax.random path, the default and the legacy-exact anchor), 'pallas'
+    (the fused selection->crossover->mutation[->fitness] VMEM megakernel
+    with on-chip counter RNG; interpret-mode off-TPU), 'pallas_ref' (the
+    megakernel's pure-jnp oracle — same counter RNG, bit-exact vs 'pallas'
+    in interpret mode for binary genomes), or any custom registration.
+    Note 'pallas'/'pallas_ref' draw their randomness from a different
+    (counter-based) stream than 'jnp', so trajectories differ between the
+    jnp and kernel families while each family is internally reproducible.
+    """
 
     max_pop: int = 256              # static lane count (padded population)
     min_pop: int = 128              # W²: per-island pop ~ U[min_pop, max_pop]
@@ -68,6 +80,7 @@ class EAConfig:
     elite: int = 2                   # elitism count
     max_evaluations: int = 5_000_000  # paper's evaluation budget
     success_eps: float = 1e-8
+    impl: str = "jnp"                # 'jnp' | 'pallas' | 'pallas_ref' | custom
 
     def mut_rate(self, genome: GenomeSpec) -> float:
         return self.mutation_rate if self.mutation_rate is not None else 1.0 / genome.length

@@ -7,7 +7,11 @@ Each kernel package ships three modules:
 
 Kernels: trap (bitstring fitness), rastrigin (CEC2010-F15 fused fitness),
 rwkv6 (chunked WKV linear recurrence), flash_attention (causal online-
-softmax attention).
+softmax attention), ga (the evolution-kernel engine: fused
+selection->crossover->mutation[->fitness] generation megakernels behind
+the (op, genome_kind, impl) operator registry — selected per experiment
+via ``EAConfig.impl``; ships its own counter-based Threefry RNG so the
+jnp oracle and the kernel consume identical random streams).
 """
 
 

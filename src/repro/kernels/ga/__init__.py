@@ -1,0 +1,30 @@
+"""GA evolution-kernel engine: fused generation kernels + operator registry.
+
+The repo's fifth engine axis (topology x driver x runtime x acceptance x
+**impl**): the per-generation hot path — selection -> crossover ->
+mutation (-> optionally the problem's fitness) — as one fused Pallas
+megakernel per genome kind, with genome tiles resident in VMEM and
+on-chip counter-based RNG (:mod:`.prng`). Selected per experiment with
+``EAConfig(impl=...)``; every driver (batched, fused lax.scan, SPMD
+shard_map, async fire-masked) dispatches through the registry here.
+
+Modules:
+    registry.py   — (op, genome_kind, impl) -> callable table
+    prng.py       — Threefry-2x32 counter RNG (kernel- and jnp-executable)
+    common.py     — the shared generation math (single source of truth)
+    generation.py — the pl.pallas_call megakernel
+    ref.py        — the pure-jnp oracle (impl='pallas_ref')
+    ops.py        — public wrappers + built-in registrations
+"""
+from .common import GenerationSpec, fused_fitness, generation_math
+from .registry import (available_impls, get_kernel, has_kernel,
+                       register_kernel, registered_kernels)
+from .ops import (generation, generation_eval, generation_eval_ref,
+                  generation_ref, make_spec)
+
+__all__ = [
+    "GenerationSpec", "available_impls", "fused_fitness", "generation",
+    "generation_eval", "generation_eval_ref", "generation_math",
+    "generation_ref", "get_kernel", "has_kernel", "make_spec",
+    "register_kernel", "registered_kernels",
+]

@@ -1,0 +1,232 @@
+"""Shared math of the fused GA generation: one function, two executors.
+
+:func:`generation_math` is the complete tournament/roulette-selection ->
+crossover -> mutation (-> optional fused fitness evaluation) pipeline as a
+pure function of arrays + static parameters. It is written exclusively in
+Pallas-lowerable ops — one-hot matmul gathers instead of dynamic row
+gathers, triangular-matmul prefix sums instead of ``cumsum``, >=2-D iota,
+counter-based RNG from :mod:`repro.kernels.ga.prng` — so the *same code*
+runs inside the Pallas megakernel body (:mod:`.generation`) and as the
+plain-jnp oracle (:mod:`.ref`). Parity between the two paths is therefore
+structural: any divergence is a lowering bug, not an algorithm fork.
+
+Static parameters arrive via :class:`GenerationSpec` (derived from
+``EAConfig`` + ``GenomeSpec`` by ``ops.py``) rather than the dataclasses
+themselves, keeping this module importable without ``repro.core``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import prng
+
+# python float, not a jnp scalar: a module-level jnp constant would be a
+# captured tracer inside the pallas kernel body
+NEG_INF = float("-inf")
+
+# Draw-site stream salts — one per random decision in the pipeline. The
+# kernel and the oracle must consume identical streams, so these are the
+# protocol, not an implementation detail.
+SALT_SELECT_A = 0xA1
+SALT_SELECT_B = 0xB2
+SALT_CROSSOVER = 0xC3
+SALT_CROSSOVER_GATE = 0xD4
+SALT_MUTATE = 0xE5
+SALT_MUTATE_NOISE = 0xF6
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerationSpec:
+    """Static description of one generation step (hashable, jit-constant)."""
+
+    kind: str                    # 'binary' | 'float'
+    length: int
+    elite: int
+    selection: str               # 'tournament' | 'roulette'
+    tournament_k: int
+    crossover: str               # 'two_point' | 'uniform' | 'blend'
+    crossover_rate: float
+    mutation_rate: float
+    mutation_sigma: float
+    low: float = -5.0
+    high: float = 5.0
+    blend_alpha: float = 0.5
+    fused_eval: Optional[Tuple[Tuple[str, Any], ...]] = None
+
+    def __post_init__(self):
+        if self.kind not in ("binary", "float"):
+            raise ValueError(f"unknown genome kind {self.kind!r}")
+        if self.selection not in ("tournament", "roulette"):
+            raise ValueError(f"unknown selection {self.selection!r}")
+        if self.crossover not in ("two_point", "uniform", "blend"):
+            raise ValueError(f"unknown crossover {self.crossover!r}")
+        if self.crossover == "blend" and self.kind != "float":
+            raise ValueError("blend crossover requires float genome")
+
+    @property
+    def eval_spec(self) -> Optional[Dict[str, Any]]:
+        return dict(self.fused_eval) if self.fused_eval is not None else None
+
+
+def _lanes(n: int) -> jax.Array:
+    """(n,) int32 lane indices (2-D iota then reshape — TPU-safe)."""
+    return jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0).reshape(n)
+
+
+def _gather_rows(popf: jax.Array, idx: jax.Array) -> jax.Array:
+    """Row gather as a one-hot matmul: (m,) indices from (n, L) -> (m, L).
+
+    MXU-native on TPU; bit-exact for 0/1 and small-float genomes either way
+    because each output row is 1*row + 0*rest.
+    """
+    n = popf.shape[0]
+    onehot = (idx[:, None] == _lanes(n)[None, :]).astype(jnp.float32)
+    return jnp.dot(onehot, popf, preferred_element_type=jnp.float32)
+
+
+def _argmax_lane(v: jax.Array) -> jax.Array:
+    """Scalar argmax of a (n,) vector via a (1, n) reduction (TPU-safe)."""
+    return jnp.argmax(v.reshape(1, -1), axis=1)[0]
+
+
+def _tournament(k0, k1, masked: jax.Array, maxval: jax.Array,
+                n_children: int, k: int, salt: int) -> jax.Array:
+    """(n_children,) parent indices via size-k tournaments over valid lanes."""
+    n = masked.shape[0]
+    cand = prng.randint(k0, k1, (n_children, k), maxval, salt)
+    hit = cand[:, :, None] == _lanes(n)[None, None, :]
+    cand_f = jnp.max(jnp.where(hit, masked[None, None, :], NEG_INF), axis=-1)
+    win = jnp.argmax(cand_f, axis=1)
+    ks = jax.lax.broadcasted_iota(jnp.int32, (n_children, k), 1)
+    return jnp.sum(jnp.where(ks == win[:, None], cand, 0), axis=1)
+
+
+def _roulette(k0, k1, masked: jax.Array, maxval: jax.Array,
+              n_children: int, salt: int) -> jax.Array:
+    """Fitness-proportional selection by inverse CDF. Padded lanes carry
+    weight exactly 0 (they sit past the valid prefix, so the final clamp
+    keeps boundary draws inside [0, pop_size))."""
+    n = masked.shape[0]
+    valid = jnp.isfinite(masked)
+    finite = jnp.where(valid, masked, 0.0)
+    lo = jnp.min(jnp.where(valid, masked, jnp.inf))
+    w = jnp.where(valid, finite - lo + 1e-6, 0.0)
+    # inclusive prefix sum as a lower-triangular matmul (no cumsum on TPU)
+    ri = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    ci = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    tril = (ci <= ri).astype(jnp.float32)
+    cum = jnp.dot(tril, w[:, None], preferred_element_type=jnp.float32)[:, 0]
+    total = cum[n - 1]
+    u = prng.uniform(k0, k1, (n_children, 1), salt)[:, 0] * total
+    idx = jnp.sum((cum[None, :] <= u[:, None]).astype(jnp.int32), axis=1)
+    return jnp.minimum(idx, jnp.asarray(maxval, jnp.int32) - 1)
+
+
+def fused_fitness(popf: jax.Array, spec: Dict[str, Any]) -> jax.Array:
+    """In-VMEM fitness of the freshly built population — the optional fused
+    tail of the megakernel. ``popf`` is (n, L) float32; returns (n,) f32
+    with the same maximization orientation as ``Problem.evaluate``."""
+    kind = spec["eval"]
+    n = popf.shape[0]
+    if kind == "trap":
+        a, b, z, l = (float(spec["a"]), float(spec["b"]), float(spec["z"]),
+                      int(spec["l"]))
+        u = popf.reshape(n, -1, l).sum(axis=-1)
+        f = jnp.where(u <= z, a * (z - u) / z, b * (u - z) / (l - z))
+        return f.sum(axis=-1)
+    if kind == "royal_road":
+        r = int(spec["r"])
+        u = popf.reshape(n, -1, r).sum(axis=-1)
+        return jnp.float32(r) * (u >= r - 0.5).astype(jnp.float32).sum(-1)
+    if kind == "onemax":
+        return popf.sum(axis=-1)
+    if kind == "rastrigin":
+        r = (popf * popf - 10.0 * jnp.cos(jnp.float32(2.0 * jnp.pi) * popf)
+             + 10.0)
+        return -r.sum(axis=-1)
+    if kind == "sphere":
+        return -(popf * popf).sum(axis=-1)
+    raise ValueError(f"unknown fused eval {kind!r}")
+
+
+def generation_math(k0: jax.Array, k1: jax.Array, pop: jax.Array,
+                    fitness: jax.Array, pop_size: jax.Array,
+                    spec: GenerationSpec):
+    """One full GA generation on a VMEM-resident (max_pop, L) tile.
+
+    Layout contract matches ``ga.next_generation``: slots [0, elite) hold
+    the elite of the *valid* lanes, the rest hold fresh children; lanes
+    >= pop_size are computed but algorithmically inert (they are never
+    selected as parents and their fitness reads -inf).
+
+    Returns the new (max_pop, L) population in ``pop.dtype`` — plus the
+    (max_pop,) raw fused fitness when ``spec.fused_eval`` is set.
+    """
+    n, L = pop.shape
+    assert L == spec.length, (L, spec.length)
+    lanes = _lanes(n)
+    masked = jnp.where(lanes < pop_size, fitness, NEG_INF)
+    popf = pop.astype(jnp.float32)
+    maxval = jnp.maximum(pop_size, 1)
+    n_children = n - spec.elite
+
+    # --- elite: iterative masked argmax (spec.elite is static, unrolled)
+    elite_rows = []
+    tmp = masked
+    for _ in range(spec.elite):
+        idx = _argmax_lane(tmp)
+        elite_rows.append(_gather_rows(popf, idx[None]))
+        tmp = jnp.where(lanes == idx, NEG_INF, tmp)
+
+    # --- selection
+    if spec.selection == "tournament":
+        ia = _tournament(k0, k1, masked, maxval, n_children,
+                         spec.tournament_k, SALT_SELECT_A)
+        ib = _tournament(k0, k1, masked, maxval, n_children,
+                         spec.tournament_k, SALT_SELECT_B)
+    else:
+        ia = _roulette(k0, k1, masked, maxval, n_children, SALT_SELECT_A)
+        ib = _roulette(k0, k1, masked, maxval, n_children, SALT_SELECT_B)
+    pa = _gather_rows(popf, ia)
+    pb = _gather_rows(popf, ib)
+
+    # --- crossover
+    if spec.crossover == "two_point":
+        cuts = prng.randint(k0, k1, (n_children, 2), L + 1, SALT_CROSSOVER)
+        c1 = jnp.min(cuts, axis=1, keepdims=True)
+        c2 = jnp.max(cuts, axis=1, keepdims=True)
+        pos = jax.lax.broadcasted_iota(jnp.int32, (n_children, L), 1)
+        inside = (pos >= c1) & (pos < c2)
+        kids = jnp.where(inside, pb, pa)
+    elif spec.crossover == "uniform":
+        take = prng.bernoulli(k0, k1, (n_children, L), 0.5, SALT_CROSSOVER)
+        kids = jnp.where(take, pb, pa)
+    else:  # blend (float only, checked in GenerationSpec)
+        a = spec.blend_alpha
+        u = (prng.uniform(k0, k1, (n_children, L), SALT_CROSSOVER)
+             * (1.0 + 2.0 * a) - a)
+        kids = pa + u * (pb - pa)
+    gate = prng.bernoulli(k0, k1, (n_children, 1), spec.crossover_rate,
+                          SALT_CROSSOVER_GATE)
+    kids = jnp.where(gate, kids, pa)
+
+    # --- mutation
+    hits = prng.bernoulli(k0, k1, (n_children, L), spec.mutation_rate,
+                          SALT_MUTATE)
+    if spec.kind == "binary":
+        kids = jnp.where(hits, 1.0 - kids, kids)
+    else:
+        noise = (prng.normal(k0, k1, (n_children, L), SALT_MUTATE_NOISE)
+                 * spec.mutation_sigma)
+        kids = jnp.where(hits, kids + noise, kids)
+        kids = jnp.clip(kids, spec.low, spec.high)
+
+    new_popf = jnp.concatenate(elite_rows + [kids], axis=0)
+    new_pop = new_popf.astype(pop.dtype)
+    if spec.fused_eval is not None:
+        return new_pop, fused_fitness(new_popf, spec.eval_spec)
+    return new_pop

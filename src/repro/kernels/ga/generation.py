@@ -1,0 +1,72 @@
+"""Pallas megakernel: one fused GA generation per island.
+
+One ``pallas_call`` invocation runs the *entire* inner loop body of the
+evolutionary algorithm — tournament/roulette selection, crossover,
+mutation, and (optionally) the trap/royal-road/rastrigin fitness of the
+new population — on a single VMEM-resident (max_pop, L) genome tile. The
+host-visible alternative is four jnp ops with four PRNG splits and an HBM
+round-trip between each (``ga.next_generation``); here nothing leaves
+VMEM between selection and the evaluated child.
+
+Shapes are small by design (an island's padded population: 256x160 int8 =
+40 KiB binary, 256x1000 f32 = 1 MiB float — far under a core's VMEM), so
+the kernel uses no grid: the whole tile is one program, and batching over
+islands comes from ``jax.vmap`` on the ``pallas_call`` (one grid dimension
+per vmapped axis). Randomness is generated on chip from a counter-based
+Threefry stream (:mod:`.prng`) seeded by two uint32 key words — no noise
+tensors are materialized in HBM.
+
+The algorithm body is :func:`repro.kernels.ga.common.generation_math`,
+shared with the jnp oracle (:mod:`.ref`) — interpret-mode parity is
+bit-exact for binary genomes by construction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import GenerationSpec, generation_math
+
+
+def _generation_kernel(seed_ref, size_ref, pop_ref, fit_ref, out_ref, *,
+                       spec: GenerationSpec):
+    k0 = seed_ref[0]
+    k1 = seed_ref[1]
+    out_ref[...] = generation_math(k0, k1, pop_ref[...], fit_ref[...],
+                                   size_ref[0], spec)
+
+
+def _generation_eval_kernel(seed_ref, size_ref, pop_ref, fit_ref, out_ref,
+                            fit_out_ref, *, spec: GenerationSpec):
+    k0 = seed_ref[0]
+    k1 = seed_ref[1]
+    new_pop, new_fit = generation_math(k0, k1, pop_ref[...], fit_ref[...],
+                                       size_ref[0], spec)
+    out_ref[...] = new_pop
+    fit_out_ref[...] = new_fit
+
+
+def generation_kernel(seed: jax.Array, size: jax.Array, pop: jax.Array,
+                      fitness: jax.Array, spec: GenerationSpec,
+                      interpret: bool = False):
+    """seed: (2,) uint32; size: (1,) int32; pop: (max_pop, L);
+    fitness: (max_pop,) f32 -> new pop (max_pop, L) [+ (max_pop,) f32 raw
+    fitness when ``spec.fused_eval`` is set]."""
+    n, L = pop.shape
+    if spec.fused_eval is not None:
+        kernel = functools.partial(_generation_eval_kernel, spec=spec)
+        return pl.pallas_call(
+            kernel,
+            out_shape=(jax.ShapeDtypeStruct((n, L), pop.dtype),
+                       jax.ShapeDtypeStruct((n,), jnp.float32)),
+            interpret=interpret,
+        )(seed, size, pop, fitness)
+    kernel = functools.partial(_generation_kernel, spec=spec)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n, L), pop.dtype),
+        interpret=interpret,
+    )(seed, size, pop, fitness)

@@ -1,0 +1,130 @@
+"""Public wrappers + built-in registrations for the GA kernel engine.
+
+Adapts the driver-side contract (``rng`` typed key, ``EAConfig`` +
+``GenomeSpec`` statics, scalar ``pop_size``) to the kernel contract
+(two uint32 seed words, :class:`~repro.kernels.ga.common.GenerationSpec`),
+and registers the built-in impls:
+
+* ``jnp``        — the classic :func:`repro.core.ga.next_generation_jnp`
+                   path (four ops, jax.random streams).
+* ``pallas``     — the fused VMEM megakernel (interpret-mode off-TPU).
+* ``pallas_ref`` — the megakernel's pure-jnp oracle (same counter RNG).
+
+``generation_eval`` fuses the problem's fitness into the same kernel and
+is registered for ``pallas``/``pallas_ref`` only — the ``jnp`` impl keeps
+evaluation in ``Problem.evaluate`` (that split *is* the baseline the speed
+harness measures against).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .. import on_tpu
+from . import generation as _k
+from . import ref as _ref
+from .common import GenerationSpec
+from .registry import register_kernel
+
+
+def make_spec(cfg, genome,
+              fused: Optional[Dict[str, Any]] = None) -> GenerationSpec:
+    """Freeze the (EAConfig, GenomeSpec[, Problem.fused]) statics into the
+    kernel-side :class:`GenerationSpec` (hashable, jit-constant)."""
+    return GenerationSpec(
+        kind=genome.kind,
+        length=genome.length,
+        elite=cfg.elite,
+        selection=cfg.selection,
+        tournament_k=cfg.tournament_k,
+        crossover=cfg.crossover,
+        crossover_rate=cfg.crossover_rate,
+        mutation_rate=cfg.mut_rate(genome),
+        mutation_sigma=cfg.mutation_sigma,
+        low=genome.low,
+        high=genome.high,
+        fused_eval=(tuple(sorted(fused.items()))
+                    if fused is not None else None),
+    )
+
+
+def _seed_words(rng: jax.Array) -> jax.Array:
+    """Typed PRNG key -> the (2,) uint32 words seeding the counter RNG.
+
+    Key data is 2 words under the default threefry impl; other impls (rbg:
+    4 words, 1-word impls) are folded/padded to exactly two so the engine
+    works under any ``jax_default_prng_impl``.
+    """
+    data = jax.random.key_data(rng).astype(jnp.uint32).ravel()
+    if data.shape[0] == 1:
+        return jnp.stack([data[0], jnp.uint32(0)])
+    k0, k1 = data[0], data[1]
+    for w in range(2, data.shape[0]):  # static: fold extra words into k1
+        k1 = k1 ^ data[w]
+    return jnp.stack([k0, k1])
+
+
+def _size_vec(pop_size) -> jax.Array:
+    return jnp.asarray(pop_size, jnp.int32).reshape(1)
+
+
+# ---------------------------------------------------------------------------
+# generation: (rng, pop, fitness, pop_size, cfg, genome) -> new_pop
+# ---------------------------------------------------------------------------
+@register_kernel("generation", "binary", "pallas")
+@register_kernel("generation", "float", "pallas")
+def generation(rng, pop, fitness, pop_size, cfg, genome, *,
+               interpret: Optional[bool] = None):
+    spec = make_spec(cfg, genome)
+    interpret = (not on_tpu()) if interpret is None else interpret
+    return _k.generation_kernel(_seed_words(rng), _size_vec(pop_size), pop,
+                                fitness, spec, interpret=interpret)
+
+
+@register_kernel("generation", "binary", "pallas_ref")
+@register_kernel("generation", "float", "pallas_ref")
+def generation_ref(rng, pop, fitness, pop_size, cfg, genome):
+    spec = make_spec(cfg, genome)
+    return _ref.generation(_seed_words(rng), _size_vec(pop_size), pop,
+                           fitness, spec)
+
+
+# ---------------------------------------------------------------------------
+# generation_eval: ... + fused spec -> (new_pop, raw_fitness)
+# ---------------------------------------------------------------------------
+@register_kernel("generation_eval", "binary", "pallas")
+@register_kernel("generation_eval", "float", "pallas")
+def generation_eval(rng, pop, fitness, pop_size, cfg, genome, fused, *,
+                    interpret: Optional[bool] = None):
+    spec = make_spec(cfg, genome, fused=fused)
+    interpret = (not on_tpu()) if interpret is None else interpret
+    return _k.generation_kernel(_seed_words(rng), _size_vec(pop_size), pop,
+                                fitness, spec, interpret=interpret)
+
+
+@register_kernel("generation_eval", "binary", "pallas_ref")
+@register_kernel("generation_eval", "float", "pallas_ref")
+def generation_eval_ref(rng, pop, fitness, pop_size, cfg, genome, fused):
+    spec = make_spec(cfg, genome, fused=fused)
+    return _ref.generation(_seed_words(rng), _size_vec(pop_size), pop,
+                           fitness, spec)
+
+
+def _register_jnp():
+    # Runs at import time, so importing repro.kernels.ga pulls repro.core.
+    # That is safe only while no repro.core module imports kernels.ga at
+    # *top level* (core.ga defers its registry import to dispatch time) —
+    # keep it that way or move this registration to first lookup.
+    from repro.core import ga as core_ga
+
+    @register_kernel("generation", "binary", "jnp")
+    @register_kernel("generation", "float", "jnp")
+    def generation_jnp(rng, pop, fitness, pop_size, cfg, genome):
+        return core_ga.next_generation_jnp(rng, pop, fitness, pop_size, cfg,
+                                           genome)
+    return generation_jnp
+
+
+_register_jnp()

@@ -1,0 +1,108 @@
+"""Counter-based PRNG for the GA generation megakernel (Threefry-2x32).
+
+The generation kernel draws randomness *on chip*: no precomputed noise
+tensors travel HBM->VMEM, and every draw site is a pure function of
+``(key, salt, counter)`` — the kernel and its jnp oracle consume the same
+bits, which is what makes the jnp<->pallas(interpret) parity tests
+bit-exact for binary genomes.
+
+Implementation: the standard 20-round Threefry-2x32 block cipher (Salmon
+et al., SC'11 — the same family jax.random uses) written in pure
+``jnp`` uint32 ops (wrapping add / xor / rotate), so the *identical* code
+runs inside a Pallas kernel body and in ordinary traced jax. The derived
+distributions (uniform / randint / bernoulli / normal) are defined here
+once; they intentionally favour kernel-friendly ops (24-bit uniforms via
+integer convert, modulo randint, Box-Muller normals) over matching
+``jax.random``'s exact bit recipes — the oracle is this module, not
+jax.random.
+
+All helpers take 2-D ``shape``s: TPU iota must be >= 2-D, and every draw
+site in the generation kernel is naturally (rows, cols). Streams are
+separated by a caller-chosen ``salt`` placed in the second counter word;
+distinct salts give independent streams for the same key.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Threefry-2x32 rotation schedule (8 constants, reused over 20 rounds).
+_ROTATIONS = (13, 15, 26, 6, 17, 29, 16, 24)
+_PARITY = 0x1BD11BDA  # key-schedule parity constant
+
+u32 = jnp.uint32
+
+
+def _rotl(x: jax.Array, r: int) -> jax.Array:
+    return (x << u32(r)) | (x >> u32(32 - r))
+
+
+def threefry2x32(k0: jax.Array, k1: jax.Array, x0: jax.Array,
+                 x1: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """20-round Threefry-2x32: encrypt counter block (x0, x1) under (k0, k1).
+
+    All inputs uint32 (scalars broadcast); returns two uint32 arrays of the
+    broadcast shape. Pure wrapping uint32 arithmetic — safe inside Pallas.
+    """
+    k0 = jnp.asarray(k0, u32)
+    k1 = jnp.asarray(k1, u32)
+    x0 = jnp.asarray(x0, u32)
+    x1 = jnp.asarray(x1, u32)
+    ks = (k0, k1, k0 ^ k1 ^ u32(_PARITY))
+
+    x0 = x0 + ks[0]
+    x1 = x1 + ks[1]
+    for block in range(5):
+        rots = _ROTATIONS[:4] if block % 2 == 0 else _ROTATIONS[4:]
+        for r in rots:
+            x0 = x0 + x1
+            x1 = _rotl(x1, r) ^ x0
+        x0 = x0 + ks[(block + 1) % 3]
+        x1 = x1 + ks[(block + 2) % 3] + u32(block + 1)
+    return x0, x1
+
+
+def _counters(shape: Tuple[int, int]) -> jax.Array:
+    """Linear counter grid for a 2-D draw (TPU-safe broadcasted iota)."""
+    assert len(shape) == 2, f"prng draws must be 2-D, got {shape}"
+    rows = jax.lax.broadcasted_iota(u32, shape, 0)
+    cols = jax.lax.broadcasted_iota(u32, shape, 1)
+    return rows * u32(shape[1]) + cols
+
+
+def random_bits(k0: jax.Array, k1: jax.Array, shape: Tuple[int, int],
+                salt: int) -> jax.Array:
+    """(shape) uint32 of fresh bits for stream ``salt`` under key (k0, k1)."""
+    cnt = _counters(shape)
+    out, _ = threefry2x32(k0, k1, cnt, jnp.full(shape, salt, u32))
+    return out
+
+
+def uniform(k0, k1, shape, salt) -> jax.Array:
+    """f32 uniforms in [0, 1): top 24 bits scaled — exact in float32."""
+    bits = random_bits(k0, k1, shape, salt)
+    return (bits >> u32(8)).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def randint(k0, k1, shape, maxval, salt) -> jax.Array:
+    """int32 in [0, maxval) (maxval may be traced; tiny modulo bias is part
+    of this RNG's contract and shared by kernel + oracle)."""
+    bits = random_bits(k0, k1, shape, salt)
+    return (bits % jnp.asarray(maxval, u32)).astype(jnp.int32)
+
+
+def bernoulli(k0, k1, shape, p, salt) -> jax.Array:
+    return uniform(k0, k1, shape, salt) < jnp.float32(p)
+
+
+def normal(k0, k1, shape, salt) -> jax.Array:
+    """Standard normals via Box-Muller (both counter words of one call)."""
+    cnt = _counters(shape)
+    b0, b1 = threefry2x32(k0, k1, cnt, jnp.full(shape, salt, u32))
+    scale = jnp.float32(1.0 / (1 << 24))
+    u1 = (b0 >> u32(8)).astype(jnp.float32) * scale
+    u2 = (b1 >> u32(8)).astype(jnp.float32) * scale
+    r = jnp.sqrt(-2.0 * jnp.log(1.0 - u1))  # 1-u1 in (0,1]: log is finite
+    return r * jnp.cos(jnp.float32(2.0 * jnp.pi) * u2)

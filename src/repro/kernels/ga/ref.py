@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the GA generation megakernel.
+
+Executes :func:`repro.kernels.ga.common.generation_math` — the *same*
+function the Pallas kernel body runs — as ordinary traced jax, so the
+kernel's interpret-mode output must match this bit-for-bit for binary
+genomes (and to float rounding for float genomes). Registered in the
+operator registry as ``impl='pallas_ref'``: any driver (batched, fused,
+SPMD, async) can run the whole experiment on the oracle and be compared
+array-for-array against ``impl='pallas'``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import GenerationSpec, generation_math
+
+
+def generation(seed: jax.Array, size: jax.Array, pop: jax.Array,
+               fitness: jax.Array, spec: GenerationSpec):
+    """Same contract as :func:`.generation.generation_kernel`, no Pallas."""
+    return generation_math(seed[0], seed[1], pop, fitness, size[0], spec)

@@ -32,6 +32,7 @@ from repro.core import (AcceptanceConfig, AsyncConfig, AsyncHostBridge,
 from repro.core import pbt as pbt_lib
 from repro.core.sharded import (run_fused_sharded, run_fused_sharded_async,
                                 run_sharded)
+from repro.kernels import ga as ga_kernels
 from repro.data import SyntheticLM
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import TrainState, init_train_state
@@ -44,7 +45,8 @@ def run_ea(problem_name: str = "trap", islands: int = 8, epochs: int = 50,
            verbose: bool = True, topology: str = "pool", fused: bool = False,
            bridge: bool = False, runtime: str = "sync",
            acfg: AsyncConfig = None, acceptance: str = "always",
-           acceptance_epsilon: float = 0.0, **problem_kwargs):
+           acceptance_epsilon: float = 0.0, impl: str = "jnp",
+           **problem_kwargs):
     """Run the NodIO experiment. ``topology`` selects the registered
     migration strategy, ``fused`` the lax.scan driver (single compile, max
     device throughput), ``bridge`` attaches a host PoolServer through a
@@ -55,9 +57,11 @@ def run_ea(problem_name: str = "trap", islands: int = 8, epochs: int = 50,
     selects the registered immigrant-acceptance policy (core.acceptance)
     applied by every pool insert and migration delivery —
     ``acceptance_epsilon`` is the 'dedup' rejection radius; the bridged
-    PoolServer mirrors the same policy so host and device pools agree."""
+    PoolServer mirrors the same policy so host and device pools agree.
+    ``impl`` selects the generation-operator engine (repro.kernels.ga):
+    'jnp' is the classic path, 'pallas' the fused megakernel."""
     problem = make_problem(problem_name, **problem_kwargs)
-    cfg = EAConfig()
+    cfg = EAConfig(impl=impl)
     acc = AcceptanceConfig(policy=acceptance, epsilon=acceptance_epsilon)
     mig = MigrationConfig(topology=topology, acceptance=acc)
     is_async = runtime == "async"
@@ -217,6 +221,20 @@ def main(argv=None):
     ea.add_argument("--acceptance-epsilon", type=float, default=0.0,
                     help="dedup rejection radius (genome distance; 0 = "
                          "exact duplicates only)")
+    ea.add_argument("--impl", default="jnp",
+                    choices=ga_kernels.available_impls("generation"),
+                    help="generation-operator engine (repro.kernels.ga "
+                         "registry): jnp = classic four-op jax.random "
+                         "path; pallas = fused selection->crossover->"
+                         "mutation[->fitness] VMEM megakernel with "
+                         "on-chip counter RNG (interpret-mode off-TPU); "
+                         "pallas_ref = the megakernel's pure-jnp oracle. "
+                         "Benchmark the impls against each other with "
+                         "`python -m benchmarks.speed_baseline`, which "
+                         "writes BENCH_speed.json (evals_per_sec rows "
+                         "per problem x genome length x impl; the host "
+                         "block records jax/backend/device so numbers "
+                         "are comparable across machines)")
     pbt = sub.add_parser("pbt")
     pbt.add_argument("--arch", choices=ARCHS, default="minicpm-2b")
     pbt.add_argument("--members", type=int, default=4)
@@ -231,7 +249,7 @@ def main(argv=None):
                args.sharded, topology=args.topology, fused=args.fused,
                bridge=args.bridge, runtime=args.runtime, acfg=acfg,
                acceptance=args.acceptance,
-               acceptance_epsilon=args.acceptance_epsilon)
+               acceptance_epsilon=args.acceptance_epsilon, impl=args.impl)
     else:
         run_pbt(args.arch, args.members, args.epochs, args.steps_per_epoch)
 

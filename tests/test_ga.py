@@ -45,6 +45,27 @@ class TestSelection:
         counts = np.bincount(np.asarray(idx), minlength=4)
         assert counts[2] > counts[0]
 
+    def test_roulette_padded_lane_logits_exactly_neg_inf(self):
+        """Regression: padded lanes used to get weight 1e-30 instead of
+        -inf logits — a tiny but *nonzero* selection probability. The
+        logit of every invalid lane must now be exactly -inf (probability
+        zero by construction, not by numerical accident)."""
+        f = jnp.arange(16.0)
+        logits = np.asarray(ga.roulette_logits(f, jnp.int32(5)))
+        assert np.isneginf(logits[5:]).all()
+        assert np.isfinite(logits[:5]).all()
+
+    def test_roulette_never_selects_padded_when_valid_weights_tiny(self):
+        """Adversarial variant: all valid lanes share one fitness value, so
+        every valid weight collapses to the 1e-6 floor — the regime where
+        a finite padded logit is closest to competitive."""
+        f = jnp.zeros(64)
+        idx = ga.roulette_select(jax.random.key(3), f, jnp.int32(3), 8000)
+        assert int(idx.max()) < 3
+        # all valid lanes equally likely
+        counts = np.bincount(np.asarray(idx), minlength=3)
+        assert counts.min() > 8000 / 3 * 0.8
+
 
 class TestCrossover:
     def test_two_point_genes_from_parents(self):

@@ -1,0 +1,383 @@
+"""GA evolution-kernel engine (repro.kernels.ga): registry contracts,
+counter-RNG distributions, GA operator invariants under every registered
+impl, jnp<->pallas(interpret) parity (bit-exact for binary genomes), the
+fused generation+evaluation path, async fire-mask inertness, and SPMD
+replica parity (subprocess-isolated on 8 fake devices)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AsyncConfig, EAConfig, MigrationConfig, make_onemax,
+                        make_rastrigin, make_royal_road, make_sphere,
+                        make_trap, run_fused, run_fused_async)
+from repro.core import ga as core_ga
+from repro.core import island as island_lib
+from repro.core.async_migration import async_step, init_async_state
+from repro.core.types import GenomeSpec
+from repro.kernels import ga as gk
+from repro.kernels.ga import prng
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+BIN = GenomeSpec("binary", 24)
+FLT = GenomeSpec("float", 16, -5.0, 5.0)
+KERNEL_IMPLS = ("pallas", "pallas_ref")
+
+
+def _pop(rng, n, spec):
+    if spec.kind == "binary":
+        return jax.random.bernoulli(rng, 0.5, (n, spec.length)).astype(jnp.int8)
+    return jax.random.uniform(rng, (n, spec.length), jnp.float32,
+                              spec.low, spec.high)
+
+
+def _fit(pop):
+    return pop.astype(jnp.float32).sum(-1)
+
+
+def _gen(impl, rng, pop, fit, pop_size, cfg, genome):
+    kern = gk.get_kernel("generation", genome.kind, impl)
+    return kern(rng, pop, fit, jnp.int32(pop_size), cfg, genome)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+class TestRegistry:
+    def test_builtin_impls_complete(self):
+        for kind in ("binary", "float"):
+            assert set(gk.available_impls("generation", kind)) >= {
+                "jnp", "pallas", "pallas_ref"}
+            # the fused op ships for the kernel family only — the jnp impl
+            # keeps evaluation in Problem.evaluate (that IS the baseline)
+            assert set(gk.available_impls("generation_eval", kind)) == {
+                "pallas", "pallas_ref"}
+
+    def test_common_impls_across_kinds(self):
+        assert {"jnp", "pallas", "pallas_ref"} <= set(
+            gk.available_impls("generation"))
+
+    def test_unknown_impl_raises_with_inventory(self):
+        with pytest.raises(KeyError, match="pallas"):
+            gk.get_kernel("generation", "binary", "no_such_impl")
+
+    def test_has_kernel(self):
+        assert gk.has_kernel("generation", "float", "pallas")
+        assert not gk.has_kernel("generation_eval", "float", "jnp")
+
+    def test_custom_registration_dispatches_from_ea_config(self):
+        @gk.register_kernel("generation", "binary", "_test_reverse")
+        def reverse_gen(rng, pop, fitness, pop_size, cfg, genome):
+            return pop[::-1]
+
+        try:
+            cfg = EAConfig(max_pop=8, min_pop=8, impl="_test_reverse")
+            pop = _pop(jax.random.key(0), 8, BIN)
+            out = core_ga.next_generation(jax.random.key(1), pop, _fit(pop),
+                                          jnp.int32(8), cfg, BIN)
+            np.testing.assert_array_equal(np.asarray(out),
+                                          np.asarray(pop)[::-1])
+        finally:
+            del gk.registry._KERNELS[("generation", "binary",
+                                      "_test_reverse")]
+
+    def test_jnp_registry_entry_is_classic_path(self):
+        cfg = EAConfig(max_pop=16, min_pop=8)
+        pop = _pop(jax.random.key(0), 16, BIN)
+        via_registry = _gen("jnp", jax.random.key(5), pop, _fit(pop), 12,
+                            cfg, BIN)
+        direct = core_ga.next_generation_jnp(jax.random.key(5), pop,
+                                             _fit(pop), jnp.int32(12), cfg,
+                                             BIN)
+        np.testing.assert_array_equal(np.asarray(via_registry),
+                                      np.asarray(direct))
+
+
+# ---------------------------------------------------------------------------
+# Counter-based RNG
+# ---------------------------------------------------------------------------
+class TestPrng:
+    K = (jnp.uint32(0xDEAD), jnp.uint32(0xBEEF))
+
+    def test_deterministic(self):
+        a = prng.random_bits(*self.K, (8, 16), salt=1)
+        b = prng.random_bits(*self.K, (8, 16), salt=1)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_salt_and_key_separate_streams(self):
+        a = prng.random_bits(*self.K, (8, 16), salt=1)
+        b = prng.random_bits(*self.K, (8, 16), salt=2)
+        c = prng.random_bits(jnp.uint32(1), jnp.uint32(2), (8, 16), salt=1)
+        assert (np.asarray(a) != np.asarray(b)).any()
+        assert (np.asarray(a) != np.asarray(c)).any()
+
+    def test_uniform_range_and_mean(self):
+        u = np.asarray(prng.uniform(*self.K, (64, 64), salt=3))
+        assert u.min() >= 0.0 and u.max() < 1.0
+        assert abs(u.mean() - 0.5) < 0.02
+
+    def test_randint_bounds(self):
+        r = np.asarray(prng.randint(*self.K, (32, 32), 7, salt=4))
+        assert r.min() >= 0 and r.max() < 7 and r.dtype == np.int32
+
+    def test_bernoulli_rate(self):
+        b = np.asarray(prng.bernoulli(*self.K, (64, 64), 0.3, salt=5))
+        assert abs(b.mean() - 0.3) < 0.03
+
+    def test_normal_moments(self):
+        z = np.asarray(prng.normal(*self.K, (64, 64), salt=6))
+        assert np.isfinite(z).all()
+        assert abs(z.mean()) < 0.05 and abs(z.std() - 1.0) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# jnp <-> pallas(interpret) parity, every registered kernel configuration
+# ---------------------------------------------------------------------------
+PARITY_CASES = [
+    (BIN, "tournament", "two_point"),
+    (BIN, "tournament", "uniform"),
+    (BIN, "roulette", "two_point"),
+    (FLT, "tournament", "blend"),
+    (FLT, "roulette", "uniform"),
+]
+
+
+class TestParity:
+    @pytest.mark.parametrize("spec,selection,crossover", PARITY_CASES)
+    @pytest.mark.parametrize("pop_size", [32, 19])  # full + padded lanes
+    def test_generation_matches_oracle(self, spec, selection, crossover,
+                                       pop_size):
+        cfg = EAConfig(max_pop=32, min_pop=8, selection=selection,
+                       crossover=crossover, mutation_rate=0.1)
+        pop = _pop(jax.random.key(7), 32, spec)
+        fit = _fit(pop)
+        got = _gen("pallas", jax.random.key(11), pop, fit, pop_size, cfg,
+                   spec)
+        want = _gen("pallas_ref", jax.random.key(11), pop, fit, pop_size,
+                    cfg, spec)
+        if spec.kind == "binary":
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        else:
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       atol=1e-6)
+
+    @pytest.mark.parametrize("maker,kw", [
+        (make_trap, {"n_traps": 6, "l": 4}),
+        (make_onemax, {"length": 24}),
+        (make_royal_road, {"n_blocks": 6, "r": 4}),
+        (make_rastrigin, {"dim": 16}),
+        (make_sphere, {"dim": 16}),
+    ])
+    def test_fused_eval_matches_separate_eval(self, maker, kw):
+        """generation_eval == generation + Problem.evaluate, per impl pair."""
+        problem = maker(**kw)
+        spec = problem.genome
+        cfg = EAConfig(max_pop=32, min_pop=8,
+                       crossover="blend" if spec.kind == "float"
+                       else "two_point")
+        pop = problem.init_population(jax.random.key(0), 32)
+        fit = problem.evaluate(problem.consts, pop)
+        rng = jax.random.key(13)
+        outs = {}
+        for impl in KERNEL_IMPLS:
+            kern = gk.get_kernel("generation_eval", spec.kind, impl)
+            new_pop, new_fit = kern(rng, pop, fit, jnp.int32(24), cfg, spec,
+                                    problem.fused)
+            plain = _gen(impl, rng, pop, fit, 24, cfg, spec)
+            want_fit = problem.evaluate(problem.consts, new_pop)
+            if spec.kind == "binary":
+                np.testing.assert_array_equal(np.asarray(new_pop),
+                                              np.asarray(plain))
+                np.testing.assert_array_equal(np.asarray(new_fit),
+                                              np.asarray(want_fit))
+            else:
+                np.testing.assert_allclose(np.asarray(new_pop),
+                                           np.asarray(plain), atol=1e-6)
+                np.testing.assert_allclose(np.asarray(new_fit),
+                                           np.asarray(want_fit), rtol=1e-5,
+                                           atol=1e-4)
+            outs[impl] = np.asarray(new_pop)
+        if spec.kind == "binary":
+            np.testing.assert_array_equal(outs["pallas"],
+                                          outs["pallas_ref"])
+
+
+# ---------------------------------------------------------------------------
+# Operator invariants, per kernel impl
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("impl", KERNEL_IMPLS)
+class TestInvariants:
+    def test_elite_preserves_best_valid(self, impl):
+        cfg = EAConfig(max_pop=32, min_pop=8, elite=2, mutation_rate=0.5)
+        pop = _pop(jax.random.key(0), 32, BIN)
+        fit = _fit(pop)
+        masked = core_ga.mask_fitness(fit, jnp.int32(20))
+        new = _gen(impl, jax.random.key(1), pop, fit, 20, cfg, BIN)
+        best = np.asarray(pop[int(jnp.argmax(masked))])
+        np.testing.assert_array_equal(np.asarray(new[0]), best)
+
+    @pytest.mark.parametrize("selection", ["tournament", "roulette"])
+    def test_padded_lanes_invisible(self, impl, selection):
+        """Valid lanes all-zero, padded lanes all-one: with mutation off,
+        no padded gene may leak into any child under either selection."""
+        n, ps = 32, 20
+        lanes = jnp.arange(n)[:, None]
+        pop = jnp.where(lanes < ps, 0, 1).astype(jnp.int8) * jnp.ones(
+            (n, BIN.length), jnp.int8)
+        fit = _fit(pop)  # valid: 0.0, padded: L (tempting if selectable)
+        cfg = EAConfig(max_pop=n, min_pop=8, selection=selection,
+                       mutation_rate=0.0)
+        new = _gen(impl, jax.random.key(2), pop, fit, ps, cfg, BIN)
+        assert int(np.asarray(new).sum()) == 0
+
+    def test_float_clipped_after_mutation(self, impl):
+        cfg = EAConfig(max_pop=32, min_pop=8, mutation_rate=1.0,
+                       mutation_sigma=100.0)
+        pop = _pop(jax.random.key(3), 32, FLT)
+        new = np.asarray(_gen(impl, jax.random.key(4), pop, _fit(pop), 32,
+                              cfg, FLT))
+        assert new.min() >= FLT.low and new.max() <= FLT.high
+
+    def test_binary_stays_binary(self, impl):
+        cfg = EAConfig(max_pop=32, min_pop=8, mutation_rate=0.5)
+        new = np.asarray(_gen(impl, jax.random.key(5),
+                              _pop(jax.random.key(6), 32, BIN),
+                              _fit(_pop(jax.random.key(6), 32, BIN)), 32,
+                              cfg, BIN))
+        assert new.dtype == np.int8 and set(np.unique(new)) <= {0, 1}
+
+    def test_output_shape_static_across_pop_sizes(self, impl):
+        cfg = EAConfig(max_pop=32, min_pop=8)
+        pop = _pop(jax.random.key(7), 32, BIN)
+        for ps in (8, 20, 32):
+            new = _gen(impl, jax.random.key(8), pop, _fit(pop), ps, cfg, BIN)
+            assert new.shape == pop.shape and new.dtype == pop.dtype
+
+
+# ---------------------------------------------------------------------------
+# Driver-level parity: fused scan, async fire masks
+# ---------------------------------------------------------------------------
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        if hasattr(x, "dtype") and jax.dtypes.issubdtype(
+                x.dtype, jax.dtypes.prng_key):
+            x, y = jax.random.key_data(x), jax.random.key_data(y)
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestDrivers:
+    def test_run_fused_parity(self):
+        problem = make_trap(n_traps=4, l=4)
+        mig = MigrationConfig(topology="ring", pool_capacity=8)
+        outs = {}
+        for impl in KERNEL_IMPLS:
+            cfg = EAConfig(max_pop=16, min_pop=8, generations_per_epoch=2,
+                           impl=impl)
+            outs[impl] = run_fused(problem, cfg, mig, n_islands=4,
+                                   max_epochs=3, rng=jax.random.key(0),
+                                   w2=True)
+        _assert_trees_equal(outs["pallas"][:2], outs["pallas_ref"][:2])
+
+    def test_run_fused_async_parity_under_fire_masks(self):
+        """Heterogeneous clocks + churn: the fire-masked pallas engine is
+        bit-for-bit its oracle — masked lanes stayed inert identically."""
+        problem = make_trap(n_traps=4, l=4)
+        mig = MigrationConfig(topology="pool", pool_capacity=8)
+        acfg = AsyncConfig(min_rate=0.3, max_rate=1.0, staleness=2,
+                           churn_fraction=0.5, seed=3)
+        outs = {}
+        for impl in KERNEL_IMPLS:
+            cfg = EAConfig(max_pop=16, min_pop=8, generations_per_epoch=2,
+                           impl=impl)
+            outs[impl] = run_fused_async(problem, cfg, mig, acfg,
+                                         n_islands=6, max_ticks=5,
+                                         rng=jax.random.key(0), w2=True,
+                                         return_astate=True)
+        _assert_trees_equal(outs["pallas"], outs["pallas_ref"])
+
+    def test_non_firing_islands_inert(self):
+        """A tick in which no island's clock crosses the period must leave
+        every island untouched under the pallas engine."""
+        problem = make_onemax(16)
+        cfg = EAConfig(max_pop=16, min_pop=8, generations_per_epoch=2,
+                       impl="pallas")
+        mig = MigrationConfig(topology="pool", pool_capacity=8)
+        acfg = AsyncConfig(min_rate=0.4, max_rate=0.4)  # fires every ~3rd
+        islands = island_lib.init_islands(jax.random.key(0), 4, problem, cfg)
+        from repro.core import pool as pool_lib
+        pool = pool_lib.pool_init(8, problem.genome)
+        astate = init_async_state(jax.random.key(1), 4, acfg, 4,
+                                  problem.genome)
+        new_islands, _, new_astate = jax.jit(
+            lambda i, p, a, k: async_step(i, p, a, k, problem, cfg, mig,
+                                          acfg, False, tick=1))(
+            islands, pool, astate, jax.random.key(2))
+        assert int(np.asarray(new_astate.fires).sum()) == 0
+        _assert_trees_equal(new_islands, islands)
+
+    def test_royal_road_solves_with_pallas_engine(self):
+        problem = make_royal_road(n_blocks=3, r=2)
+        cfg = EAConfig(max_pop=32, min_pop=32, generations_per_epoch=10,
+                       mutation_rate=0.05, impl="pallas")
+        isl, _, ep = run_fused(problem, cfg,
+                               MigrationConfig(topology="ring"),
+                               n_islands=4, max_epochs=10,
+                               rng=jax.random.key(0))
+        assert float(np.asarray(isl.best_fitness).max()) == problem.optimum
+
+
+# ---------------------------------------------------------------------------
+# SPMD: the megakernel inside shard_map on the 8-fake-device mesh
+# ---------------------------------------------------------------------------
+SPMD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax
+    import numpy as np
+    from repro.core import EAConfig, MigrationConfig, make_trap
+    from repro.core.sharded import run_fused_sharded
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh()
+    problem = make_trap(n_traps=4, l=4)
+    mig = MigrationConfig(topology="ring", pool_capacity=8)
+    outs = {}
+    for impl in ("pallas", "pallas_ref"):
+        cfg = EAConfig(max_pop=16, min_pop=8, generations_per_epoch=2,
+                       impl=impl)
+        outs[impl] = run_fused_sharded(mesh, problem, cfg, mig,
+                                       islands_per_shard=2, max_epochs=3,
+                                       rng=jax.random.key(0))
+    ok = True
+    for a, b in zip(jax.tree.leaves(outs["pallas"][:2]),
+                    jax.tree.leaves(outs["pallas_ref"][:2])):
+        if hasattr(a, "dtype") and jax.dtypes.issubdtype(
+                a.dtype, jax.dtypes.prng_key):
+            a, b = jax.random.key_data(a), jax.random.key_data(b)
+        ok = ok and bool((np.asarray(a) == np.asarray(b)).all())
+    best = float(np.asarray(outs["pallas"][0].best_fitness).max())
+    print(json.dumps({"parity": ok, "n_devices": jax.device_count(),
+                      "finite_best": bool(np.isfinite(best))}))
+""")
+
+
+def test_spmd_megakernel_parity():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src")
+               + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", SPMD_SCRIPT], env=env,
+                          cwd=REPO, capture_output=True, text=True,
+                          timeout=1200)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    import json
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["n_devices"] == 8
+    assert out["parity"] and out["finite_best"]

@@ -6,7 +6,8 @@ import pytest
 
 from repro.core.problems import (f15_ref, make_f15, make_f15_consts,
                                  make_onemax, make_problem, make_rastrigin,
-                                 make_sphere, make_trap, rastrigin,
+                                 make_royal_road, make_sphere, make_trap,
+                                 rastrigin, royal_road_fitness_ref,
                                  trap_fitness_ref)
 
 
@@ -36,6 +37,32 @@ class TestTrap:
         consts = {"a": 1.0, "b": 2.0, "z": 3.0, "l": 4}
         x = jnp.array([[1, 1, 1, 1, 0, 0, 0, 0]], dtype=jnp.int8)  # 2.0 + 1.0
         assert float(trap_fitness_ref(consts, x)[0]) == pytest.approx(3.0)
+
+
+class TestRoyalRoad:
+    def test_all_ones_is_optimum(self):
+        p = make_royal_road(n_blocks=8, r=4)
+        ones = jnp.ones((1, 32), jnp.int8)
+        assert float(p.evaluate(p.consts, ones)[0]) == pytest.approx(32.0)
+        assert p.optimum == 32.0
+
+    def test_only_complete_blocks_score(self):
+        """R1 plateau structure: a block contributes r iff fully set —
+        7/8 bits of a block are worth exactly nothing."""
+        consts = {"r": 4}
+        x = jnp.array([
+            [1, 1, 1, 1, 0, 0, 0, 0],   # one complete block -> 4
+            [1, 1, 1, 0, 1, 1, 1, 0],   # two near-misses -> 0
+            [1, 1, 1, 1, 1, 1, 1, 1],   # both complete -> 8
+            [0, 0, 0, 0, 0, 0, 0, 0],   # nothing -> 0
+        ], dtype=jnp.int8)
+        got = royal_road_fitness_ref(consts, x)
+        np.testing.assert_allclose(np.asarray(got), [4.0, 0.0, 8.0, 0.0])
+
+    def test_registry_and_fused_spec(self):
+        p = make_problem("royal_road", n_blocks=4, r=8)
+        assert p.genome.length == 32 and p.genome.kind == "binary"
+        assert p.fused == {"eval": "royal_road", "r": 8}
 
 
 class TestRastrigin:
