@@ -1,7 +1,10 @@
-"""Roofline analysis over the dry-run artifacts (TPU v5e targets).
+"""Roofline analysis: dry-run HLO artifacts + generation-engine placement.
 
-Reads benchmarks/results/dryrun/*.json (written by repro.launch.dryrun) and
-derives, per (arch x shape) on the single-pod mesh:
+Two sections share one hardware model:
+
+**Dry-run section** (the original): reads benchmarks/results/dryrun/*.json
+(written by repro.launch.dryrun) and derives, per (arch x shape) on the
+single-pod mesh:
 
     compute term    = HLO_FLOPs_per_device / peak_FLOPs      [s]
     memory term     = HLO_bytes_per_device / HBM_bw          [s]
@@ -10,11 +13,27 @@ derives, per (arch x shape) on the single-pod mesh:
 (The dry-run HLO module is the per-device SPMD program, so its cost numbers
 are already per-device; scan bodies are extrapolated by the dry-run's
 two-point unroll method.) The dominant term is the bottleneck; MODEL_FLOPS
-(6·N·D dense / 6·N_active·D MoE for training, 2·N·D for serving) over
-HLO_FLOPs measures how much compiled compute is useful (remat/dispatch
-overheads push it below 1).
+over HLO_FLOPs measures how much compiled compute is useful.
 
-Hardware constants: 197 bf16 TFLOP/s, 819 GB/s HBM, ~50 GB/s/link ICI.
+**Generation section** (:func:`generation_roofline`): times one GA
+generation step per engine impl (jnp vs pallas vs pallas_tiled) on a
+synthetic population and places the measured evals/sec against the
+*memory-bandwidth* roofline — a generation is bandwidth-bound (its only
+mandatory traffic is read-population + write-population, ~2·L·itemsize
+bytes per evaluation; the arithmetic per gene is trivial), so
+
+    ceiling_evals_per_sec = HBM_bw / (2 * L * itemsize)
+
+and ``roofline_fraction = measured / ceiling`` says how far each engine
+sits below the memory wall. Off-TPU the pallas rows measure interpret-mode
+emulation (fractions are tiny and meaningless for hardware placement —
+the stamped env block says which reading applies); the rows are emitted
+into ``BENCH_speed.json`` either way so the trajectory exists from the
+first commit.
+
+Hardware constants are a per-``device_kind`` table (:data:`HW_TABLE`) with
+a CLI override (``--peak-flops/--hbm-bw/--ici-bw``); unknown device kinds
+fall back to the TPU v5e row, loudly, in the ``hw`` field of every record.
 """
 from __future__ import annotations
 
@@ -22,13 +41,55 @@ import argparse
 import glob
 import json
 import os
-from typing import Dict, List, Optional
+import time
+from typing import Any, Dict, List, Optional
 
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-ICI_BW = 50e9
+# Per-device_kind hardware constants (bf16 peak, HBM bandwidth, per-link
+# ICI bandwidth). Keys are matched case-insensitively as substrings of
+# jax's device_kind string ("TPU v5 lite" etc.); first match wins.
+HW_TABLE: Dict[str, Dict[str, float]] = {
+    "v5 lite": {"peak_flops": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9},
+    "v5e":     {"peak_flops": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9},
+    "v5p":     {"peak_flops": 459e12, "hbm_bw": 2765e9, "ici_bw": 90e9},
+    "v4":      {"peak_flops": 275e12, "hbm_bw": 1228e9, "ici_bw": 50e9},
+    "v3":      {"peak_flops": 123e12, "hbm_bw": 900e9, "ici_bw": 70e9},
+    # generic host fallback so CPU smoke runs produce finite ceilings
+    "cpu":     {"peak_flops": 0.5e12, "hbm_bw": 40e9, "ici_bw": 10e9},
+}
+_DEFAULT_KIND = "v5e"
+
+# Module-level v5e constants kept for backward compatibility with callers
+# that import them directly.
+PEAK_FLOPS = HW_TABLE[_DEFAULT_KIND]["peak_flops"]
+HBM_BW = HW_TABLE[_DEFAULT_KIND]["hbm_bw"]
+ICI_BW = HW_TABLE[_DEFAULT_KIND]["ici_bw"]
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def hw_constants(device_kind: Optional[str] = None,
+                 override: Optional[Dict[str, float]] = None
+                 ) -> Dict[str, Any]:
+    """Resolve hardware constants for ``device_kind`` (defaults to the
+    current jax device), applying any non-None ``override`` entries."""
+    if device_kind is None:
+        import jax
+        device_kind = getattr(jax.devices()[0], "device_kind",
+                              jax.default_backend())
+    matched = None
+    for key, row in HW_TABLE.items():
+        if key.lower() in str(device_kind).lower():
+            matched = key
+            break
+    row = dict(HW_TABLE[matched or _DEFAULT_KIND])
+    out = {"device_kind": str(device_kind),
+           "table_entry": matched or f"{_DEFAULT_KIND} (fallback)",
+           **row}
+    for k, v in (override or {}).items():
+        if v is not None:
+            out[k] = float(v)
+            out["table_entry"] = "cli-override"
+    return out
 
 
 def model_flops_per_device(rec: Dict) -> Optional[float]:
@@ -51,9 +112,12 @@ def model_flops_per_device(rec: Dict) -> Optional[float]:
     return 2.0 * active * info["batch"] / n_chips
 
 
-def analyze(rec: Dict) -> Optional[Dict]:
+def analyze(rec: Dict, hw: Optional[Dict[str, float]] = None
+            ) -> Optional[Dict]:
     if not rec.get("supported") or "hlo_flops_per_device" not in rec:
         return None
+    hw = hw or {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW,
+                "ici_bw": ICI_BW}
     mf = model_flops_per_device(rec)
     note = ""
     flops = rec["hlo_flops_per_device"]
@@ -64,10 +128,10 @@ def analyze(rec: Dict) -> Optional[Dict]:
         flops = mf / 0.8
         rec = dict(rec, hlo_flops_per_device=flops)
         note = "flops~analytic (unroll extrapolation non-linear)"
-    compute = flops / PEAK_FLOPS
-    memory = rec["hlo_bytes_per_device"] / HBM_BW
+    compute = flops / hw["peak_flops"]
+    memory = rec["hlo_bytes_per_device"] / hw["hbm_bw"]
     wire = rec["collective_bytes_per_device"].get("total", 0.0)
-    collective = wire / ICI_BW
+    collective = wire / hw["ici_bw"]
     terms = {"compute": compute, "memory": memory, "collective": collective}
     dominant = max(terms, key=terms.get)
     bound = max(terms.values())
@@ -79,7 +143,8 @@ def analyze(rec: Dict) -> Optional[Dict]:
         "useful_ratio": (mf / rec["hlo_flops_per_device"]
                          if rec["hlo_flops_per_device"] else None),
         # roofline fraction: ideal compute time over the binding term
-        "roofline_fraction": (mf / PEAK_FLOPS) / bound if bound else None,
+        "roofline_fraction": (mf / hw["peak_flops"]) / bound if bound
+        else None,
         "peak_gib_per_device": rec["peak_bytes_per_device"] / 2**30,
         "accum": rec.get("accum"),
         "note": note,
@@ -99,7 +164,8 @@ def load_records(mesh: str = "16x16") -> List[Dict]:
     return out
 
 
-def table(mesh: str = "16x16") -> List[str]:
+def table(mesh: str = "16x16",
+          hw: Optional[Dict[str, float]] = None) -> List[str]:
     rows = ["arch,shape,compute_s,memory_s,collective_s,dominant,"
             "roofline_frac,useful_ratio,peak_GiB,note"]
     for rec in load_records(mesh):
@@ -107,7 +173,7 @@ def table(mesh: str = "16x16") -> List[str]:
             rows.append(f"{rec['arch']},{rec['shape']},,,,skipped,,,,"
                         f"\"{rec['skip_reason']}\"")
             continue
-        a = analyze(rec)
+        a = analyze(rec, hw=hw)
         if a is None:
             rows.append(f"{rec['arch']},{rec['shape']},,,,compiled-only,,,"
                         f"{rec['peak_bytes_per_device']/2**30:.2f},")
@@ -120,11 +186,114 @@ def table(mesh: str = "16x16") -> List[str]:
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Generation-engine roofline (jnp vs pallas vs pallas_tiled)
+# ---------------------------------------------------------------------------
+def _bench_generation(impl: str, n: int, L: int, kind: str,
+                      repeats: int, tile_pop: Optional[int],
+                      tile_len: Optional[int]) -> float:
+    """Median seconds for one generation step of impl on an (n, L) pop."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import EAConfig
+    from repro.core.types import GenomeSpec
+    from repro.kernels import ga as gk
+
+    genome = (GenomeSpec("binary", L) if kind == "binary"
+              else GenomeSpec("float", L, -5.0, 5.0))
+    cfg = EAConfig(max_pop=n, min_pop=min(8, n),
+                   crossover="two_point" if kind == "binary" else "blend",
+                   impl=impl)
+    rng = jax.random.key(0)
+    pop = (jax.random.bernoulli(rng, 0.5, (n, L)).astype(jnp.int8)
+           if kind == "binary"
+           else jax.random.uniform(rng, (n, L), jnp.float32, -5.0, 5.0))
+    fit = pop.astype(jnp.float32).sum(-1)
+    kern = gk.get_kernel("generation", kind, impl)
+    kwargs = {}
+    if impl == "pallas_tiled":
+        kwargs = {"tile_pop": tile_pop, "tile_len": tile_len}
+    step = jax.jit(lambda k: kern(k, pop, fit, jnp.int32(n), cfg, genome,
+                                  **kwargs))
+    step(rng).block_until_ready()  # compile + warm-up
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        step(rng).block_until_ready()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def generation_roofline(impls=("jnp", "pallas", "pallas_tiled"), *,
+                        n: int = 2048, L: int = 256, kind: str = "binary",
+                        repeats: int = 3,
+                        tile_pop: Optional[int] = None,
+                        tile_len: Optional[int] = None,
+                        hw: Optional[Dict[str, Any]] = None
+                        ) -> Dict[str, Any]:
+    """Measure generation evals/sec per impl and place each against the
+    memory-bandwidth roofline. Returns the BENCH_speed.json section."""
+    hw = hw or hw_constants()
+    itemsize = 1 if kind == "binary" else 4
+    bytes_per_eval = 2 * L * itemsize      # mandatory: read pop + write pop
+    ceiling = hw["hbm_bw"] / bytes_per_eval
+    rows = []
+    for impl in impls:
+        sec = _bench_generation(impl, n, L, kind, repeats, tile_pop,
+                                tile_len)
+        eps = n / sec
+        rows.append({
+            "impl": impl, "pop": n, "genome_length": L,
+            "genome_kind": kind,
+            "evals_per_sec": eps,
+            "seconds_per_generation": sec,
+            "roofline_fraction": eps / ceiling,
+        })
+    return {
+        "metric": "single generation-step throughput vs HBM roofline "
+                  "(ceiling = hbm_bw / (2 * L * itemsize); off-TPU the "
+                  "pallas rows time interpret-mode emulation — see "
+                  "host.env.pallas_interpret)",
+        "hw": hw,
+        "bytes_per_eval_min": bytes_per_eval,
+        "ceiling_evals_per_sec": ceiling,
+        "rows": rows,
+    }
+
+
+def _hw_override(args) -> Dict[str, float]:
+    return {"peak_flops": args.peak_flops, "hbm_bw": args.hbm_bw,
+            "ici_bw": args.ici_bw}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--device-kind", default=None,
+                    help="override HW_TABLE lookup (default: current jax "
+                         "device)")
+    ap.add_argument("--peak-flops", type=float, default=None)
+    ap.add_argument("--hbm-bw", type=float, default=None)
+    ap.add_argument("--ici-bw", type=float, default=None)
+    ap.add_argument("--generation", action="store_true",
+                    help="also run the generation-engine roofline "
+                         "(jnp vs pallas vs pallas_tiled)")
+    ap.add_argument("--pop", type=int, default=2048)
+    ap.add_argument("--genome-length", type=int, default=256)
+    ap.add_argument("--kind", default="binary",
+                    choices=["binary", "float"])
     args = ap.parse_args(argv)
-    print("\n".join(table(args.mesh)))
+    hw = hw_constants(args.device_kind, _hw_override(args))
+    print(f"# hw: {hw}")
+    print("\n".join(table(args.mesh, hw=hw)))
+    if args.generation:
+        section = generation_roofline(n=args.pop, L=args.genome_length,
+                                      kind=args.kind, hw=hw)
+        print("impl,pop,L,evals_per_sec,roofline_fraction")
+        for r in section["rows"]:
+            print(f"{r['impl']},{r['pop']},{r['genome_length']},"
+                  f"{r['evals_per_sec']:.0f},{r['roofline_fraction']:.2e}")
 
 
 if __name__ == "__main__":

@@ -107,8 +107,8 @@ def main(argv=None) -> None:
         print()
 
     if "speed" not in args.skip:
-        print("== Speed baseline (evals/sec, jnp vs pallas generation "
-              "engine) ==")
+        print("== Speed baseline (evals/sec, jnp vs pallas vs pallas_tiled "
+              "generation engine + HBM roofline placement) ==")
         from benchmarks import speed_baseline
         speed_rows = speed_baseline.run(full=args.full, verbose=False)
         print("\n".join(speed_baseline.summarize(speed_rows)))

@@ -15,11 +15,16 @@ through the fused ``lax.scan`` driver and records
   metric), with the success rate alongside;
 
 and writes them to ``BENCH_speed.json`` together with the host/backend
-block (:mod:`benchmarks.hostmeta`) — the repo's first machine-readable
-speed trajectory. ``impl`` rows compare the classic jnp generation path
-against the fused Pallas megakernel (interpret-mode off-TPU, so on CPU
-the pallas rows measure the emulation, not the hardware — the JSON's
-``host.backend`` field says which reading applies).
+block (:mod:`benchmarks.hostmeta`) — the repo's machine-readable speed
+trajectory. ``impl`` rows compare the classic jnp generation path against
+the fused Pallas megakernel and the grid-tiled streaming engine
+(interpret-mode off-TPU, so on CPU the pallas rows measure the emulation,
+not the hardware — the JSON's ``host.env.pallas_interpret`` field says
+which reading applies). The payload also carries the generation-engine
+roofline section (:func:`benchmarks.roofline.generation_roofline`): one
+generation step per impl placed against the HBM-bandwidth ceiling, which
+is how the tiled kernel's throughput is judged against the memory wall
+rather than against another interpreter.
 
 CLI:  PYTHONPATH=src python -m benchmarks.speed_baseline [--full]
 (or through ``python -m benchmarks.run``, which owns the JSON when run as
@@ -119,7 +124,10 @@ def bench_scenario(scenario: Dict[str, Any], impl: str, *, runs: int,
     return out
 
 
-def run(full: bool = False, impls: Sequence[str] = ("jnp", "pallas"),
+DEFAULT_IMPLS = ("jnp", "pallas", "pallas_tiled")
+
+
+def run(full: bool = False, impls: Sequence[str] = DEFAULT_IMPLS,
         runs: Optional[int] = None, islands: Optional[int] = None,
         epochs: Optional[int] = None,
         verbose: bool = False) -> List[Dict[str, Any]]:
@@ -145,8 +153,16 @@ def summarize(rows: List[Dict[str, Any]]) -> List[str]:
     return out
 
 
-def payload(rows: List[Dict[str, Any]]) -> Dict[str, Any]:
-    """The BENCH_speed.json body (host block added by hostmeta.stamp)."""
+def payload(rows: List[Dict[str, Any]],
+            roofline: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """The BENCH_speed.json body (host block added by hostmeta.stamp).
+
+    ``roofline`` is the generation-engine roofline section; when omitted
+    it is computed here (small smoke shape) so every BENCH_speed.json
+    carries roofline-placed generation rows."""
+    if roofline is None:
+        from benchmarks.roofline import generation_roofline
+        roofline = generation_roofline(repeats=2)
     return {
         "benchmark": "speed_baseline",
         "driver": "run_fused[lax.scan]",
@@ -156,9 +172,12 @@ def payload(rows: List[Dict[str, Any]]) -> Dict[str, Any]:
         "impl_axis": "EAConfig.impl generation engine: 'jnp' = classic "
                      "four-op jax.random path, 'pallas' = fused "
                      "selection->crossover->mutation->fitness VMEM "
-                     "megakernel (interpret-mode emulation off-TPU — see "
-                     "host.backend)",
+                     "megakernel (auto-routes to the tiled engine beyond "
+                     "a VMEM estimate), 'pallas_tiled' = grid-tiled "
+                     "streaming megakernel forced (interpret-mode "
+                     "emulation off-TPU — see host.env.pallas_interpret)",
         "rows": rows,
+        "generation_roofline": roofline,
     }
 
 
@@ -169,7 +188,7 @@ def main(argv=None):
     ap.add_argument("--full", action="store_true",
                     help="paper-scale scenario table (5 problems x impls "
                          "x 5 seeded runs)")
-    ap.add_argument("--impls", nargs="+", default=["jnp", "pallas"],
+    ap.add_argument("--impls", nargs="+", default=list(DEFAULT_IMPLS),
                     help="generation-engine impls to compare")
     ap.add_argument("--runs", type=int, default=None)
     ap.add_argument("--islands", type=int, default=None)

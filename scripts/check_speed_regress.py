@@ -1,0 +1,87 @@
+#!/usr/bin/env python
+"""Speed-regression gate: fail CI if the fresh speed smoke lost >30%
+evals/sec against the committed BENCH_speed.json on the same backend.
+
+Rows are matched on (problem, genome_length, impl, max_pop, islands,
+generations_per_epoch) and only compared when the committed baseline was
+measured on the same jax backend AND the same pallas_interpret setting
+(interpret-mode emulation numbers and TPU numbers are different universes
+— comparing across them would gate on hardware, not on code). Unmatched
+rows are reported but never fail the gate, so adding scenarios or a new
+backend doesn't require regenerating every baseline first.
+
+Usage:
+    python scripts/check_speed_regress.py \
+        --baseline BENCH_speed.json --fresh /tmp/fresh_speed.json \
+        [--threshold 0.30]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, Tuple
+
+
+def _key(row: Dict[str, Any]) -> Tuple:
+    return (row["problem"], row["genome_length"], row["impl"],
+            row.get("max_pop"), row.get("islands"),
+            row.get("generations_per_epoch"))
+
+
+def _env(payload: Dict[str, Any]) -> Tuple:
+    host = payload.get("host", {})
+    env = host.get("env", {})
+    return (host.get("backend"), env.get("pallas_interpret"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--baseline", default="BENCH_speed.json")
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--threshold", type=float, default=0.30,
+                    help="max allowed fractional evals/sec drop (0.30 = "
+                         "fail below 70%% of baseline)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as fh:
+        base = json.load(fh)
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+
+    if _env(base) != _env(fresh):
+        print(f"speed gate: SKIP — baseline env {_env(base)} != fresh env "
+              f"{_env(fresh)} (cross-backend numbers are not comparable)")
+        return 0
+
+    base_rows = {_key(r): r for r in base.get("rows", [])}
+    failures, compared = [], 0
+    for row in fresh.get("rows", []):
+        ref = base_rows.get(_key(row))
+        if ref is None:
+            print(f"speed gate: new row (no baseline): {_key(row)}")
+            continue
+        compared += 1
+        floor = ref["evals_per_sec"] * (1.0 - args.threshold)
+        status = "OK" if row["evals_per_sec"] >= floor else "REGRESSED"
+        print(f"speed gate: {row['problem']:>14s} L={row['genome_length']:<5d}"
+              f" {row['impl']:>12s}: {row['evals_per_sec']:>12.0f} vs "
+              f"baseline {ref['evals_per_sec']:>12.0f} "
+              f"(floor {floor:>12.0f}) {status}")
+        if status == "REGRESSED":
+            failures.append(_key(row))
+
+    if not compared:
+        print("speed gate: SKIP — no comparable rows")
+        return 0
+    if failures:
+        print(f"speed gate: FAIL — {len(failures)} row(s) regressed "
+              f">{args.threshold:.0%} evals/sec: {failures}")
+        return 1
+    print(f"speed gate: OK — {compared} row(s) within "
+          f"{args.threshold:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

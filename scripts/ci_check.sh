@@ -10,18 +10,24 @@
 # only with a tracking note in ROADMAP.md.
 #
 # The benchmark smoke runs the pool + migration + speed sections only
-# (fig3/fig4 replay paper-scale evolution and roofline needs dry-run
-# artifacts) and leaves two machine-readable records behind:
+# (fig3 replays paper-scale evolution and roofline's dry-run section needs
+# dry-run artifacts; fig4 runs in --smoke trim below) and leaves two
+# machine-readable records behind:
 #   BENCH_migration.json — epochs/sec per registered topology via the
 #     fused driver, the bench_async sync-vs-async-under-churn section,
 #     and the bench_acceptance policy x topology sweep;
 #   BENCH_speed.json — the paper-style speed baseline (evals/sec +
 #     time-to-solution per problem x genome length x generation-engine
-#     impl, jnp vs pallas), two scenarios in smoke trim.
-# Both carry a "host" block (jax version/backend/device) so numbers are
-# attributable. The GA kernel smoke below proves the fused generation
-# megakernel (interpret mode) bit-exact against its jnp oracle before any
-# benchmark touches it.
+#     impl, jnp vs pallas vs pallas_tiled) + the generation-roofline
+#     section, two scenarios in smoke trim.
+# Both carry "host" + "host.env" blocks (jax version/backend/device,
+# XLA_FLAGS, interpret mode, autotune cache) so numbers are attributable.
+# BENCH_speed.json is a *committed* artifact: the fresh smoke is written
+# to a temp file and gated against the committed baseline (>30% evals/sec
+# regression on the same backend fails) before replacing it locally.
+# The GA kernel smokes below prove the fused generation megakernel —
+# single-tile AND grid-tiled (>=2x2x2 grid) — bit-exact against the jnp
+# oracle in interpret mode before any benchmark touches it.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -57,10 +63,36 @@ for problem, cx in ((make_trap(n_traps=8, l=4), "two_point"),
                                np.asarray(problem.evaluate(problem.consts,
                                                            gp)),
                                rtol=1e-5, atol=1e-4)
-    print(f"  {problem.name}: generation + fused-eval parity OK")
+    # tiled streaming engine forced through a >=2x2x2 grid: bit-identical
+    # to the untiled kernel (binary: also to the oracle) for any tiling
+    for tp, tl in ((16, 8), (8, 16)):
+        tgot = gk.generation_tiled(*args, interpret=True,
+                                   tile_pop=tp, tile_len=tl)
+        np.testing.assert_array_equal(np.asarray(tgot), np.asarray(got))
+        tgp, tgf = gk.generation_eval_tiled(*args, problem.fused,
+                                            interpret=True, tile_pop=tp,
+                                            tile_len=tl)
+        np.testing.assert_array_equal(np.asarray(tgp), np.asarray(gp))
+        np.testing.assert_allclose(np.asarray(tgf), np.asarray(gf),
+                                   rtol=1e-5, atol=1e-4)
+    print(f"  {problem.name}: generation + fused-eval + tiled-grid "
+          "parity OK")
 PY
 
+echo "== Fig 4 smoke (tiled generation engine end-to-end) =="
+python -m benchmarks.fig4_f15 --smoke
+
 echo "== benchmark smoke (pool + migration + async + acceptance + speed) =="
-python -m benchmarks.run --skip fig3 fig4 roofline
+FRESH_SPEED="$(mktemp /tmp/bench_speed_fresh.XXXXXX.json)"
+python -m benchmarks.run --skip fig3 fig4 roofline --speed-json "$FRESH_SPEED"
+
+echo "== speed-regression gate (fresh smoke vs committed BENCH_speed.json) =="
+if [[ -f BENCH_speed.json ]]; then
+    python scripts/check_speed_regress.py --baseline BENCH_speed.json \
+        --fresh "$FRESH_SPEED" --threshold 0.30
+else
+    echo "no committed BENCH_speed.json — first run, gate skipped"
+fi
+mv "$FRESH_SPEED" BENCH_speed.json
 
 echo "ci_check: OK"

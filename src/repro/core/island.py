@@ -82,7 +82,7 @@ def generation_step(state: IslandState, problem: Problem,
     if fused is not None:
         new_pop, raw_fit = fused(k_gen, state.pop, state.fitness,
                                  state.pop_size, cfg, problem.genome,
-                                 problem.fused)
+                                 problem.fused, consts=problem.consts)
         new_fit = ga.mask_fitness(raw_fit, state.pop_size)
     else:
         new_pop = ga.next_generation(k_gen, state.pop, state.fitness,

@@ -40,9 +40,11 @@ class Problem:
     ``{"eval": "trap", "a": 1.0, ...}``) advertising that this problem's
     fitness can be folded into a registered ``generation_eval`` megakernel
     (repro.kernels.ga) — under ``EAConfig(impl='pallas')`` the drivers then
-    evolve *and* evaluate in one VMEM-resident kernel. Problems with large
-    array consts (e.g. F15's rotation stack) leave it ``None`` and keep
-    evaluation in ``evaluate``.
+    evolve *and* evaluate in one VMEM-resident kernel. Evals that also need
+    array constants (F15's shift/permutation/rotation stack) keep those in
+    ``consts``; the drivers pass ``consts`` alongside ``fused`` so the
+    kernel can take them as operands (streamed per group by the tiled
+    engine).
     """
 
     name: str
@@ -219,6 +221,7 @@ def make_f15(rng: Optional[Array] = None, dim: int = 1000, group: int = 50,
         evaluate=evaluate,
         consts=consts,
         optimum=0.0,
+        fused={"eval": "f15", "m": int(group), "n_groups": int(dim // group)},
     )
 
 

@@ -2,29 +2,52 @@
 
 The repo's fifth engine axis (topology x driver x runtime x acceptance x
 **impl**): the per-generation hot path — selection -> crossover ->
-mutation (-> optionally the problem's fitness) — as one fused Pallas
-megakernel per genome kind, with genome tiles resident in VMEM and
-on-chip counter-based RNG (:mod:`.prng`). Selected per experiment with
-``EAConfig(impl=...)``; every driver (batched, fused lax.scan, SPMD
-shard_map, async fire-masked) dispatches through the registry here.
+mutation (-> optionally the problem's fitness) — as fused Pallas kernels
+per genome kind, with on-chip counter-based RNG (:mod:`.prng`). Selected
+per experiment with ``EAConfig(impl=...)``; every driver (batched, fused
+lax.scan, SPMD shard_map, async fire-masked) dispatches through the
+registry here.
+
+Two kernel geometries share one algorithm body (:mod:`.common`):
+
+* **single-tile** (:mod:`.generation`) — the whole (max_pop, L) genome
+  matrix resident in VMEM, zero grid. Right for island-sized populations.
+* **grid-tiled** (:mod:`.tiling`) — a (pop-blocks x genome-blocks x
+  source-blocks) Pallas grid streaming HBM tiles through double-buffered
+  VMEM copies, parent gather as a blocked one-hot matmul into persistent
+  VMEM scratch, RNG re-keyed by global tile origin so *any* tiling is
+  bit-identical to the single-tile kernel and the jnp oracle
+  (:mod:`.ref`). This is the beyond-VMEM path the Fig-4 F15 regime
+  (64k x 1000 f32) runs on; tile sizes come from :mod:`.autotune`, cached
+  per device_kind at ``benchmarks/results/autotune_ga.json`` and stamped
+  into every BENCH host block.
+
+``impl='pallas'`` auto-routes between the two on a VMEM estimate
+(``ops.VMEM_BUDGET_BYTES``); ``impl='pallas_tiled'`` forces the tiled
+engine. ``benchmarks/roofline.py`` places all three impls' generation
+throughput against the device memory-bandwidth roofline (rows land in
+``BENCH_speed.json``).
 
 Modules:
     registry.py   — (op, genome_kind, impl) -> callable table
-    prng.py       — Threefry-2x32 counter RNG (kernel- and jnp-executable)
+    prng.py       — Threefry-2x32 counter RNG, tiling-invariant counters
     common.py     — the shared generation math (single source of truth)
-    generation.py — the pl.pallas_call megakernel
+    generation.py — the single-tile pl.pallas_call megakernel
+    tiling.py     — the grid-tiled streaming megakernel
+    autotune.py   — per-device tile-size sweep + JSON cache
     ref.py        — the pure-jnp oracle (impl='pallas_ref')
-    ops.py        — public wrappers + built-in registrations
+    ops.py        — public wrappers, routing + built-in registrations
 """
 from .common import GenerationSpec, fused_fitness, generation_math
 from .registry import (available_impls, get_kernel, has_kernel,
                        register_kernel, registered_kernels)
 from .ops import (generation, generation_eval, generation_eval_ref,
-                  generation_ref, make_spec)
+                  generation_eval_tiled, generation_ref, generation_tiled,
+                  make_spec)
 
 __all__ = [
     "GenerationSpec", "available_impls", "fused_fitness", "generation",
-    "generation_eval", "generation_eval_ref", "generation_math",
-    "generation_ref", "get_kernel", "has_kernel", "make_spec",
-    "register_kernel", "registered_kernels",
+    "generation_eval", "generation_eval_ref", "generation_eval_tiled",
+    "generation_math", "generation_ref", "generation_tiled", "get_kernel",
+    "has_kernel", "make_spec", "register_kernel", "registered_kernels",
 ]

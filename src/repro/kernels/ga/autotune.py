@@ -1,0 +1,171 @@
+"""Tile-size autotune for the grid-tiled generation kernel.
+
+The tiled kernel's throughput is set almost entirely by its (tile_pop,
+tile_len) blocking: the tile must be big enough to amortize grid overhead
+and keep the MXU fed, small enough that the ~4 resident buffers (two
+parent-accumulator scratch tiles + double-buffered in/out copies) fit
+VMEM. The right point is device-dependent, so:
+
+* **On TPU** :func:`best_tiles` sweeps :data:`CANDIDATES` with real timed
+  runs (synthetic population of the requested shape, ``block_until_ready``
+  timing of the steady state after one warm-up) and picks the highest
+  evals/sec.
+* **Off TPU** (interpret mode — CI, laptops) timing is meaningless, so a
+  VMEM-model heuristic picks the largest candidate under the budget.
+
+Results are cached as JSON keyed by ``jax.devices()[0].device_kind`` at
+``benchmarks/results/autotune_ga.json`` (override with the
+``REPRO_GA_AUTOTUNE_CACHE`` env var) so a sweep runs once per device
+kind; ``benchmarks/hostmeta.py`` folds the cache into the BENCH host
+block, which is how tuned tile sizes travel with published numbers.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import on_tpu
+
+# (tile_pop, tile_len) sweep grid — all MXU/VPU-aligned.
+CANDIDATES: Tuple[Tuple[int, int], ...] = (
+    (128, 256), (128, 512), (256, 256), (256, 512), (256, 1024),
+    (512, 256), (512, 512),
+)
+
+# VMEM budget the heuristic models: 2 scratch accumulators + pipelined
+# in/out copies of the (tp, tl) tile, f32, double-buffered ≈ 8 tiles,
+# plus the (tp, tp) one-hot blocks. Conservative vs a real core's VMEM.
+_HEURISTIC_VMEM = 8 * 2**20
+
+
+def _default_cache_path() -> Path:
+    env = os.environ.get("REPRO_GA_AUTOTUNE_CACHE")
+    if env:
+        return Path(env)
+    return (Path(__file__).resolve().parents[4] / "benchmarks" / "results"
+            / "autotune_ga.json")
+
+
+def device_kind() -> str:
+    return jax.devices()[0].device_kind
+
+
+def load_cache(path: Optional[Path] = None) -> Dict[str, dict]:
+    path = Path(path or _default_cache_path())
+    if not path.exists():
+        return {}
+    try:
+        return json.loads(path.read_text())
+    except (json.JSONDecodeError, OSError):
+        return {}
+
+
+def save_cache(cache: Dict[str, dict], path: Optional[Path] = None) -> Path:
+    path = Path(path or _default_cache_path())
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(cache, indent=2, sort_keys=True) + "\n")
+    return path
+
+
+def _tile_bytes(tp: int, tl: int) -> int:
+    return 8 * tp * tl * 4 + 2 * tp * tp * 4
+
+
+def _heuristic(n: int, L: int) -> Tuple[int, int]:
+    """Largest candidate whose modeled VMEM footprint fits the budget,
+    preferring wide genome tiles (fewer j-steps => fewer RNG redraws)."""
+    fits = [(tp, tl) for tp, tl in CANDIDATES
+            if _tile_bytes(tp, tl) <= _HEURISTIC_VMEM]
+    best = max(fits, key=lambda c: (min(c[1], L), min(c[0], n)))
+    return best
+
+
+def _time_candidate(n: int, L: int, kind: str, tp: int, tl: int,
+                    runs: int = 3) -> float:
+    """Median seconds per tiled generation on synthetic data (TPU only)."""
+    from repro.core.types import EAConfig, GenomeSpec
+    from . import ops as _ops
+    from . import tiling as _tiling
+
+    genome = (GenomeSpec("binary", L) if kind == "binary"
+              else GenomeSpec("float", L, -5.0, 5.0))
+    cfg = EAConfig(max_pop=n, min_pop=min(8, n))
+    spec = _ops.make_spec(cfg, genome)
+    rng = jax.random.key(0)
+    pop = (jax.random.bernoulli(rng, 0.5, (n, L)).astype(jnp.int8)
+           if kind == "binary"
+           else jax.random.uniform(rng, (n, L), jnp.float32, -5.0, 5.0))
+    fit = pop.astype(jnp.float32).sum(-1)
+    seed = _ops._seed_words(rng)
+    size = _ops._size_vec(n)
+
+    step = jax.jit(lambda: _tiling.generation_tiled(
+        seed, size, pop, fit, spec, tile_pop=tp, tile_len=tl,
+        interpret=False))
+    step().block_until_ready()  # compile + warm up
+    times = []
+    for _ in range(runs):
+        t0 = time.perf_counter()
+        step().block_until_ready()
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2]
+
+
+def best_tiles(n: int, L: int, kind: str = "float", *,
+               cache_path: Optional[Path] = None,
+               force: bool = False) -> Tuple[int, int]:
+    """Tuned (tile_pop, tile_len) for a (n, L) population of ``kind``.
+
+    Reads the per-device_kind cache first; on a cache miss sweeps (TPU)
+    or applies the VMEM heuristic (interpret mode) and writes the cache.
+    """
+    cache = load_cache(cache_path)
+    key = device_kind()
+    entry = cache.get(key)
+    if entry is not None and not force:
+        return int(entry["tile_pop"]), int(entry["tile_len"])
+
+    if on_tpu():
+        timings = {}
+        for tp, tl in CANDIDATES:
+            try:
+                timings[(tp, tl)] = _time_candidate(n, L, kind, tp, tl)
+            except Exception:  # candidate may exceed VMEM — skip it
+                continue
+        if timings:
+            (tp, tl) = min(timings, key=timings.get)
+            entry = {"tile_pop": tp, "tile_len": tl, "timed": True,
+                     "shape": [int(n), int(L)], "kind": kind,
+                     "sweep_s": {f"{a}x{b}": t
+                                 for (a, b), t in sorted(timings.items())}}
+        else:
+            tp, tl = _heuristic(n, L)
+            entry = {"tile_pop": tp, "tile_len": tl, "timed": False,
+                     "shape": [int(n), int(L)], "kind": kind}
+    else:
+        tp, tl = _heuristic(n, L)
+        entry = {"tile_pop": tp, "tile_len": tl, "timed": False,
+                 "shape": [int(n), int(L)], "kind": kind}
+
+    cache[key] = entry
+    try:
+        save_cache(cache, cache_path)
+    except OSError:
+        pass  # read-only checkout: tuning still applies, just not cached
+    return int(entry["tile_pop"]), int(entry["tile_len"])
+
+
+def cache_summary(path: Optional[Path] = None) -> Dict[str, object]:
+    """Compact cache view for the BENCH host block."""
+    p = Path(path or _default_cache_path())
+    cache = load_cache(p)
+    return {"path": str(p),
+            "entries": {k: {kk: v[kk] for kk in
+                            ("tile_pop", "tile_len", "timed") if kk in v}
+                        for k, v in cache.items()}}

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import GenerationSpec, generation_math
+from .common import GenerationSpec, generation_math, spec_needs_consts
 
 
 def _generation_kernel(seed_ref, size_ref, pop_ref, fit_ref, out_ref, *,
@@ -39,31 +39,49 @@ def _generation_kernel(seed_ref, size_ref, pop_ref, fit_ref, out_ref, *,
                                    size_ref[0], spec)
 
 
-def _generation_eval_kernel(seed_ref, size_ref, pop_ref, fit_ref, out_ref,
-                            fit_out_ref, *, spec: GenerationSpec):
+def _generation_eval_kernel(seed_ref, size_ref, pop_ref, fit_ref, *refs,
+                            spec: GenerationSpec, with_consts: bool):
+    if with_consts:
+        o_ref, perm_ref, m_ref, out_ref, fit_out_ref = refs
+        consts = {"o": o_ref[...], "perm": perm_ref[...], "M": m_ref[...]}
+    else:
+        out_ref, fit_out_ref = refs
+        consts = None
     k0 = seed_ref[0]
     k1 = seed_ref[1]
     new_pop, new_fit = generation_math(k0, k1, pop_ref[...], fit_ref[...],
-                                       size_ref[0], spec)
+                                       size_ref[0], spec, consts=consts)
     out_ref[...] = new_pop
     fit_out_ref[...] = new_fit
 
 
 def generation_kernel(seed: jax.Array, size: jax.Array, pop: jax.Array,
                       fitness: jax.Array, spec: GenerationSpec,
-                      interpret: bool = False):
+                      interpret: bool = False, consts=None):
     """seed: (2,) uint32; size: (1,) int32; pop: (max_pop, L);
     fitness: (max_pop,) f32 -> new pop (max_pop, L) [+ (max_pop,) f32 raw
-    fitness when ``spec.fused_eval`` is set]."""
+    fitness when ``spec.fused_eval`` is set]. Fused evals with array
+    constants (f15) take them via ``consts`` — the arrays ride into VMEM as
+    extra kernel operands."""
     n, L = pop.shape
     if spec.fused_eval is not None:
-        kernel = functools.partial(_generation_eval_kernel, spec=spec)
+        with_consts = spec_needs_consts(spec)
+        kernel = functools.partial(_generation_eval_kernel, spec=spec,
+                                   with_consts=with_consts)
+        operands = [seed, size, pop, fitness]
+        if with_consts:
+            if consts is None:
+                raise ValueError(f"fused eval {spec.eval_spec['eval']!r} "
+                                 "needs problem consts")
+            operands += [jnp.asarray(consts["o"], jnp.float32),
+                         jnp.asarray(consts["perm"], jnp.int32),
+                         jnp.asarray(consts["M"], jnp.float32)]
         return pl.pallas_call(
             kernel,
             out_shape=(jax.ShapeDtypeStruct((n, L), pop.dtype),
                        jax.ShapeDtypeStruct((n,), jnp.float32)),
             interpret=interpret,
-        )(seed, size, pop, fitness)
+        )(*operands)
     kernel = functools.partial(_generation_kernel, spec=spec)
     return pl.pallas_call(
         kernel,

@@ -5,15 +5,23 @@ Adapts the driver-side contract (``rng`` typed key, ``EAConfig`` +
 (two uint32 seed words, :class:`~repro.kernels.ga.common.GenerationSpec`),
 and registers the built-in impls:
 
-* ``jnp``        — the classic :func:`repro.core.ga.next_generation_jnp`
-                   path (four ops, jax.random streams).
-* ``pallas``     — the fused VMEM megakernel (interpret-mode off-TPU).
-* ``pallas_ref`` — the megakernel's pure-jnp oracle (same counter RNG).
+* ``jnp``          — the classic :func:`repro.core.ga.next_generation_jnp`
+                     path (four ops, jax.random streams).
+* ``pallas``       — the fused VMEM megakernel (interpret-mode off-TPU).
+                     Auto-routes to the tiled engine once the untiled VMEM
+                     estimate exceeds :data:`VMEM_BUDGET_BYTES`, so callers
+                     never fall off a VMEM cliff by growing the population.
+* ``pallas_tiled`` — the grid-tiled streaming kernel (:mod:`.tiling`)
+                     explicitly, tile sizes from :mod:`.autotune` unless
+                     given. Bit-identical to ``pallas`` for any tiling.
+* ``pallas_ref``   — the megakernel's pure-jnp oracle (same counter RNG).
 
 ``generation_eval`` fuses the problem's fitness into the same kernel and
-is registered for ``pallas``/``pallas_ref`` only — the ``jnp`` impl keeps
+is registered for the kernel family only — the ``jnp`` impl keeps
 evaluation in ``Problem.evaluate`` (that split *is* the baseline the speed
-harness measures against).
+harness measures against). Fused evals with array constants (f15) receive
+them via the optional ``consts`` kwarg that every kernel-family entry
+accepts.
 """
 from __future__ import annotations
 
@@ -23,10 +31,28 @@ import jax
 import jax.numpy as jnp
 
 from .. import on_tpu
+from . import autotune as _autotune
 from . import generation as _k
 from . import ref as _ref
-from .common import GenerationSpec
+from . import tiling as _tiling
+from .common import GenerationSpec, spec_needs_consts
 from .registry import register_kernel
+
+# Routing threshold for impl='pallas': estimated VMEM working set of the
+# single-tile megakernel (6 f32 copies of the genome tile for pop/parents/
+# children + the (n, n) one-hot gather and selection blocks) above which
+# the call silently becomes a tiled-engine call. Far under real VMEM
+# (16 MiB vs ~128 MiB/core) so the untiled path keeps headroom for the
+# pipeline's own buffers.
+VMEM_BUDGET_BYTES = 16 * 2**20
+
+
+def untiled_vmem_bytes(n: int, L: int,
+                       spec: Optional[GenerationSpec] = None) -> int:
+    est = n * L * 4 * 6 + n * n * 4 * 2
+    if spec is not None and spec_needs_consts(spec):
+        est += L * L * 4 + 2 * n * L * 4  # perm one-hot + rotated copies
+    return est
 
 
 def make_spec(cfg, genome,
@@ -73,19 +99,45 @@ def _size_vec(pop_size) -> jax.Array:
 # ---------------------------------------------------------------------------
 # generation: (rng, pop, fitness, pop_size, cfg, genome) -> new_pop
 # ---------------------------------------------------------------------------
+def _tiles(pop, genome, tile_pop, tile_len):
+    if tile_pop is not None and tile_len is not None:
+        return tile_pop, tile_len
+    tp, tl = _autotune.best_tiles(pop.shape[0], genome.length, genome.kind)
+    return tile_pop or tp, tile_len or tl
+
+
 @register_kernel("generation", "binary", "pallas")
 @register_kernel("generation", "float", "pallas")
 def generation(rng, pop, fitness, pop_size, cfg, genome, *,
-               interpret: Optional[bool] = None):
+               interpret: Optional[bool] = None, consts=None):
     spec = make_spec(cfg, genome)
     interpret = (not on_tpu()) if interpret is None else interpret
+    if untiled_vmem_bytes(*pop.shape, spec) > VMEM_BUDGET_BYTES:
+        tp, tl = _tiles(pop, genome, None, None)
+        return _tiling.generation_tiled(_seed_words(rng), _size_vec(pop_size),
+                                        pop, fitness, spec, tile_pop=tp,
+                                        tile_len=tl, interpret=interpret)
     return _k.generation_kernel(_seed_words(rng), _size_vec(pop_size), pop,
                                 fitness, spec, interpret=interpret)
 
 
+@register_kernel("generation", "binary", "pallas_tiled")
+@register_kernel("generation", "float", "pallas_tiled")
+def generation_tiled(rng, pop, fitness, pop_size, cfg, genome, *,
+                     interpret: Optional[bool] = None,
+                     tile_pop: Optional[int] = None,
+                     tile_len: Optional[int] = None, consts=None):
+    spec = make_spec(cfg, genome)
+    interpret = (not on_tpu()) if interpret is None else interpret
+    tp, tl = _tiles(pop, genome, tile_pop, tile_len)
+    return _tiling.generation_tiled(_seed_words(rng), _size_vec(pop_size),
+                                    pop, fitness, spec, tile_pop=tp,
+                                    tile_len=tl, interpret=interpret)
+
+
 @register_kernel("generation", "binary", "pallas_ref")
 @register_kernel("generation", "float", "pallas_ref")
-def generation_ref(rng, pop, fitness, pop_size, cfg, genome):
+def generation_ref(rng, pop, fitness, pop_size, cfg, genome, *, consts=None):
     spec = make_spec(cfg, genome)
     return _ref.generation(_seed_words(rng), _size_vec(pop_size), pop,
                            fitness, spec)
@@ -97,19 +149,42 @@ def generation_ref(rng, pop, fitness, pop_size, cfg, genome):
 @register_kernel("generation_eval", "binary", "pallas")
 @register_kernel("generation_eval", "float", "pallas")
 def generation_eval(rng, pop, fitness, pop_size, cfg, genome, fused, *,
-                    interpret: Optional[bool] = None):
+                    interpret: Optional[bool] = None, consts=None):
     spec = make_spec(cfg, genome, fused=fused)
     interpret = (not on_tpu()) if interpret is None else interpret
+    if untiled_vmem_bytes(*pop.shape, spec) > VMEM_BUDGET_BYTES:
+        tp, tl = _tiles(pop, genome, None, None)
+        return _tiling.generation_tiled(_seed_words(rng), _size_vec(pop_size),
+                                        pop, fitness, spec, tile_pop=tp,
+                                        tile_len=tl, interpret=interpret,
+                                        consts=consts)
     return _k.generation_kernel(_seed_words(rng), _size_vec(pop_size), pop,
-                                fitness, spec, interpret=interpret)
+                                fitness, spec, interpret=interpret,
+                                consts=consts)
+
+
+@register_kernel("generation_eval", "binary", "pallas_tiled")
+@register_kernel("generation_eval", "float", "pallas_tiled")
+def generation_eval_tiled(rng, pop, fitness, pop_size, cfg, genome, fused, *,
+                          interpret: Optional[bool] = None,
+                          tile_pop: Optional[int] = None,
+                          tile_len: Optional[int] = None, consts=None):
+    spec = make_spec(cfg, genome, fused=fused)
+    interpret = (not on_tpu()) if interpret is None else interpret
+    tp, tl = _tiles(pop, genome, tile_pop, tile_len)
+    return _tiling.generation_tiled(_seed_words(rng), _size_vec(pop_size),
+                                    pop, fitness, spec, tile_pop=tp,
+                                    tile_len=tl, interpret=interpret,
+                                    consts=consts)
 
 
 @register_kernel("generation_eval", "binary", "pallas_ref")
 @register_kernel("generation_eval", "float", "pallas_ref")
-def generation_eval_ref(rng, pop, fitness, pop_size, cfg, genome, fused):
+def generation_eval_ref(rng, pop, fitness, pop_size, cfg, genome, fused, *,
+                        consts=None):
     spec = make_spec(cfg, genome, fused=fused)
     return _ref.generation(_seed_words(rng), _size_vec(pop_size), pop,
-                           fitness, spec)
+                           fitness, spec, consts=consts)
 
 
 def _register_jnp():

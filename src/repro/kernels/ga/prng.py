@@ -20,6 +20,19 @@ All helpers take 2-D ``shape``s: TPU iota must be >= 2-D, and every draw
 site in the generation kernel is naturally (rows, cols). Streams are
 separated by a caller-chosen ``salt`` placed in the second counter word;
 distinct salts give independent streams for the same key.
+
+**Tiling-invariant counters.** Every draw accepts an optional global
+``offset=(row0, col0)`` and ``row_stride``: the counter for local element
+``(r, c)`` is ``(row0 + r) * row_stride + (col0 + c)`` in wrapping uint32
+arithmetic (``row_stride`` defaults to the local column count, which
+reproduces the legacy whole-array counters). A grid-tiled kernel that
+passes its tile origin as the offset and the *global* row stride therefore
+draws bit-identical randomness to a single-tile kernel drawing the whole
+array at once — this is the re-keying contract that makes the tiled
+generation megakernel (:mod:`.tiling`) bit-exact against the untiled one
+and the jnp oracle for any tile size. Offsets may be traced (they come
+from ``pl.program_id``) and may be negative (two's-complement wrap is part
+of the contract and identical in jnp and Mosaic).
 """
 from __future__ import annotations
 
@@ -64,42 +77,54 @@ def threefry2x32(k0: jax.Array, k1: jax.Array, x0: jax.Array,
     return x0, x1
 
 
-def _counters(shape: Tuple[int, int]) -> jax.Array:
-    """Linear counter grid for a 2-D draw (TPU-safe broadcasted iota)."""
+def _counters(shape: Tuple[int, int], offset=(0, 0),
+              row_stride: int | None = None) -> jax.Array:
+    """Counter grid for a 2-D draw (TPU-safe broadcasted iota).
+
+    Counter of local element (r, c) = (row0 + r) * row_stride + (col0 + c)
+    in wrapping uint32; defaults reproduce the legacy whole-array linear
+    counters (offset (0, 0), stride = shape[1])."""
     assert len(shape) == 2, f"prng draws must be 2-D, got {shape}"
+    row0, col0 = offset
+    stride = shape[1] if row_stride is None else row_stride
     rows = jax.lax.broadcasted_iota(u32, shape, 0)
     cols = jax.lax.broadcasted_iota(u32, shape, 1)
-    return rows * u32(shape[1]) + cols
+    rows = rows + jnp.asarray(row0, jnp.int32).astype(u32)
+    cols = cols + jnp.asarray(col0, jnp.int32).astype(u32)
+    return rows * jnp.asarray(stride, jnp.int32).astype(u32) + cols
 
 
 def random_bits(k0: jax.Array, k1: jax.Array, shape: Tuple[int, int],
-                salt: int) -> jax.Array:
+                salt: int, offset=(0, 0),
+                row_stride: int | None = None) -> jax.Array:
     """(shape) uint32 of fresh bits for stream ``salt`` under key (k0, k1)."""
-    cnt = _counters(shape)
+    cnt = _counters(shape, offset, row_stride)
     out, _ = threefry2x32(k0, k1, cnt, jnp.full(shape, salt, u32))
     return out
 
 
-def uniform(k0, k1, shape, salt) -> jax.Array:
+def uniform(k0, k1, shape, salt, offset=(0, 0), row_stride=None) -> jax.Array:
     """f32 uniforms in [0, 1): top 24 bits scaled — exact in float32."""
-    bits = random_bits(k0, k1, shape, salt)
+    bits = random_bits(k0, k1, shape, salt, offset, row_stride)
     return (bits >> u32(8)).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
 
 
-def randint(k0, k1, shape, maxval, salt) -> jax.Array:
+def randint(k0, k1, shape, maxval, salt, offset=(0, 0),
+            row_stride=None) -> jax.Array:
     """int32 in [0, maxval) (maxval may be traced; tiny modulo bias is part
     of this RNG's contract and shared by kernel + oracle)."""
-    bits = random_bits(k0, k1, shape, salt)
+    bits = random_bits(k0, k1, shape, salt, offset, row_stride)
     return (bits % jnp.asarray(maxval, u32)).astype(jnp.int32)
 
 
-def bernoulli(k0, k1, shape, p, salt) -> jax.Array:
-    return uniform(k0, k1, shape, salt) < jnp.float32(p)
+def bernoulli(k0, k1, shape, p, salt, offset=(0, 0),
+              row_stride=None) -> jax.Array:
+    return uniform(k0, k1, shape, salt, offset, row_stride) < jnp.float32(p)
 
 
-def normal(k0, k1, shape, salt) -> jax.Array:
+def normal(k0, k1, shape, salt, offset=(0, 0), row_stride=None) -> jax.Array:
     """Standard normals via Box-Muller (both counter words of one call)."""
-    cnt = _counters(shape)
+    cnt = _counters(shape, offset, row_stride)
     b0, b1 = threefry2x32(k0, k1, cnt, jnp.full(shape, salt, u32))
     scale = jnp.float32(1.0 / (1 << 24))
     u1 = (b0 >> u32(8)).astype(jnp.float32) * scale

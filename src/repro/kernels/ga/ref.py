@@ -17,6 +17,7 @@ from .common import GenerationSpec, generation_math
 
 
 def generation(seed: jax.Array, size: jax.Array, pop: jax.Array,
-               fitness: jax.Array, spec: GenerationSpec):
+               fitness: jax.Array, spec: GenerationSpec, consts=None):
     """Same contract as :func:`.generation.generation_kernel`, no Pallas."""
-    return generation_math(seed[0], seed[1], pop, fitness, size[0], spec)
+    return generation_math(seed[0], seed[1], pop, fitness, size[0], spec,
+                           consts=consts)

@@ -8,13 +8,17 @@ Maps ``(op, genome_kind, impl)`` to a callable. Ops:
 * ``"generation_eval"``: ``fn(rng, pop, fitness, pop_size, cfg, genome,
   fused) -> (new_pop, raw_fitness)`` — the same generation with the
   problem's fitness fused into the kernel (``fused`` is the static
-  ``Problem.fused`` spec dict).
+  ``Problem.fused`` spec dict). Kernel-family entries also accept a
+  ``consts=`` kwarg carrying the problem's array constants (f15's
+  shift/permutation/rotation stack); drivers always pass it.
 
 Built-in impls (registered on import of :mod:`repro.kernels.ga`):
 ``jnp`` (the classic ``core.ga`` path), ``pallas`` (the fused VMEM
-megakernel, interpret-mode off-TPU), ``pallas_ref`` (the pure-jnp oracle
-of the megakernel — same counter RNG, same math; bit-exact vs ``pallas``
-in interpret mode for binary genomes). Register custom impls with::
+megakernel, interpret-mode off-TPU; auto-routes to the tiled engine
+beyond a VMEM estimate), ``pallas_tiled`` (the grid-tiled streaming
+megakernel, forced), ``pallas_ref`` (the pure-jnp oracle of both — same
+counter RNG, same math; bit-exact vs ``pallas``/``pallas_tiled`` in
+interpret mode for binary genomes). Register custom impls with::
 
     @register_kernel("generation", "binary", "my_impl")
     def my_generation(rng, pop, fitness, pop_size, cfg, genome): ...

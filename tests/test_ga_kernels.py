@@ -27,7 +27,7 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 BIN = GenomeSpec("binary", 24)
 FLT = GenomeSpec("float", 16, -5.0, 5.0)
-KERNEL_IMPLS = ("pallas", "pallas_ref")
+KERNEL_IMPLS = ("pallas", "pallas_tiled", "pallas_ref")
 
 
 def _pop(rng, n, spec):
@@ -53,14 +53,14 @@ class TestRegistry:
     def test_builtin_impls_complete(self):
         for kind in ("binary", "float"):
             assert set(gk.available_impls("generation", kind)) >= {
-                "jnp", "pallas", "pallas_ref"}
+                "jnp", "pallas", "pallas_tiled", "pallas_ref"}
             # the fused op ships for the kernel family only — the jnp impl
             # keeps evaluation in Problem.evaluate (that IS the baseline)
             assert set(gk.available_impls("generation_eval", kind)) == {
-                "pallas", "pallas_ref"}
+                "pallas", "pallas_tiled", "pallas_ref"}
 
     def test_common_impls_across_kinds(self):
-        assert {"jnp", "pallas", "pallas_ref"} <= set(
+        assert {"jnp", "pallas", "pallas_tiled", "pallas_ref"} <= set(
             gk.available_impls("generation"))
 
     def test_unknown_impl_raises_with_inventory(self):
@@ -203,6 +203,10 @@ class TestParity:
                                            np.asarray(want_fit), rtol=1e-5,
                                            atol=1e-4)
             outs[impl] = np.asarray(new_pop)
+        # the grid-tiled kernel is bit-identical to the single-tile kernel
+        # for BOTH genome kinds (same math, streamed); the jnp oracle is
+        # bit-exact only for binary (float differs by FMA contraction)
+        np.testing.assert_array_equal(outs["pallas"], outs["pallas_tiled"])
         if spec.kind == "binary":
             np.testing.assert_array_equal(outs["pallas"],
                                           outs["pallas_ref"])
@@ -261,6 +265,195 @@ class TestInvariants:
 
 
 # ---------------------------------------------------------------------------
+# Grid-tiled streaming engine: bit-identity across tilings + ragged shapes
+# ---------------------------------------------------------------------------
+TILED_CASES = [
+    # (spec, crossover, tile_pop, tile_len) — tiles chosen so the grid is
+    # >=2x2x2 (pop blocks x genome blocks x gather blocks) wherever the
+    # shape allows, plus ragged shapes that need padding on either axis
+    (GenomeSpec("binary", 24), "two_point", 16, 8),
+    (GenomeSpec("binary", 24), "uniform", 8, 24),
+    (GenomeSpec("binary", 23), "two_point", 16, 16),  # ragged genome
+    (GenomeSpec("float", 16, -5.0, 5.0), "blend", 8, 8),
+    (GenomeSpec("float", 19, -5.0, 5.0), "uniform", 16, 8),  # ragged genome
+]
+
+
+class TestTiledParity:
+    @pytest.mark.parametrize("spec,crossover,tile_pop,tile_len", TILED_CASES)
+    @pytest.mark.parametrize("n,pop_size", [(32, 32), (32, 19), (37, 30)])
+    def test_tiled_matches_untiled_and_oracle(self, spec, crossover,
+                                              tile_pop, tile_len, n,
+                                              pop_size):
+        """Any tiling is bit-identical to the single-tile kernel (both
+        genome kinds); binary genomes are additionally bit-identical to the
+        jnp oracle (float differs from the oracle only by FMA contraction,
+        exactly like the untiled kernel does)."""
+        cfg = EAConfig(max_pop=n, min_pop=8, crossover=crossover,
+                       mutation_rate=0.1)
+        pop = _pop(jax.random.key(7), n, spec)
+        fit = _fit(pop)
+        rng = jax.random.key(11)
+        untiled = _gen("pallas", rng, pop, fit, pop_size, cfg, spec)
+        ref = _gen("pallas_ref", rng, pop, fit, pop_size, cfg, spec)
+        kern = gk.get_kernel("generation", spec.kind, "pallas_tiled")
+        tiled = kern(rng, pop, fit, jnp.int32(pop_size), cfg, spec,
+                     tile_pop=tile_pop, tile_len=tile_len)
+        np.testing.assert_array_equal(np.asarray(tiled),
+                                      np.asarray(untiled))
+        if spec.kind == "binary":
+            np.testing.assert_array_equal(np.asarray(tiled),
+                                          np.asarray(ref))
+        else:
+            np.testing.assert_allclose(np.asarray(tiled), np.asarray(ref),
+                                       atol=1e-6)
+
+    def test_tiling_invariant_across_tile_sizes(self):
+        """The same call through different tile geometries is ONE stream:
+        every tiling yields the same bits (the re-keyed counter RNG is
+        addressed by absolute (row, col), not by tile)."""
+        spec = GenomeSpec("float", 24, -5.0, 5.0)
+        cfg = EAConfig(max_pop=32, min_pop=8, crossover="blend",
+                       mutation_rate=0.2)
+        pop = _pop(jax.random.key(1), 32, spec)
+        fit = _fit(pop)
+        kern = gk.get_kernel("generation", "float", "pallas_tiled")
+        outs = [np.asarray(kern(jax.random.key(3), pop, fit, jnp.int32(28),
+                                cfg, spec, tile_pop=tp, tile_len=tl))
+                for tp, tl in ((32, 24), (16, 8), (8, 24), (8, 8), (16, 12))]
+        for other in outs[1:]:
+            np.testing.assert_array_equal(outs[0], other)
+
+    @pytest.mark.parametrize("selection", ["tournament", "roulette"])
+    def test_padded_lanes_invisible_under_tiling(self, selection):
+        """Same contract as the untiled kernel, but forced through a
+        >=2x2x2 grid: no padded gene may leak across tile boundaries."""
+        n, ps = 32, 20
+        lanes = jnp.arange(n)[:, None]
+        pop = jnp.where(lanes < ps, 0, 1).astype(jnp.int8) * jnp.ones(
+            (n, BIN.length), jnp.int8)
+        fit = _fit(pop)
+        cfg = EAConfig(max_pop=n, min_pop=8, selection=selection,
+                       mutation_rate=0.0)
+        kern = gk.get_kernel("generation", "binary", "pallas_tiled")
+        new = kern(jax.random.key(2), pop, fit, jnp.int32(ps), cfg, BIN,
+                   tile_pop=16, tile_len=8)
+        assert int(np.asarray(new).sum()) == 0
+
+    def test_fused_trap_fitness_accumulates_across_genome_tiles(self):
+        """Fused separable eval streamed across genome tiles == whole-row
+        eval, including the padded-tail correction for all-zero trap
+        blocks."""
+        problem = make_trap(n_traps=6, l=4)
+        cfg = EAConfig(max_pop=32, min_pop=8, crossover="two_point")
+        pop = problem.init_population(jax.random.key(0), 32)
+        fit = problem.evaluate(problem.consts, pop)
+        kern = gk.get_kernel("generation_eval", "binary", "pallas_tiled")
+        for tp, tl in ((16, 8), (8, 12), (8, 24)):
+            new_pop, new_fit = kern(jax.random.key(9), pop, fit,
+                                    jnp.int32(24), cfg, problem.genome,
+                                    problem.fused, tile_pop=tp, tile_len=tl)
+            np.testing.assert_allclose(
+                np.asarray(new_fit),
+                np.asarray(problem.evaluate(problem.consts, new_pop)),
+                rtol=1e-5, atol=1e-4)
+
+    def test_fused_f15_matches_reference_eval(self):
+        """The fused F15 path (rotation-stack streaming): tiled == untiled
+        population bit-exact; fused fitness == Problem.evaluate (f15_ref)
+        within fp32 tolerance for both."""
+        from repro.core.problems import make_f15
+        problem = make_f15(dim=64, group=8)
+        cfg = EAConfig(max_pop=16, min_pop=8, crossover="blend",
+                       mutation_sigma=0.3)
+        pop = problem.init_population(jax.random.key(0), 16)
+        fit = problem.evaluate(problem.consts, pop)
+        rng = jax.random.key(21)
+        outs = {}
+        for impl, kw in (("pallas", {}),
+                         ("pallas_tiled", {"tile_pop": 8, "tile_len": 16})):
+            kern = gk.get_kernel("generation_eval", "float", impl)
+            new_pop, new_fit = kern(rng, pop, fit, jnp.int32(12), cfg,
+                                    problem.genome, problem.fused,
+                                    consts=problem.consts, **kw)
+            np.testing.assert_allclose(
+                np.asarray(new_fit),
+                np.asarray(problem.evaluate(problem.consts, new_pop)),
+                rtol=2e-4, atol=1e-3)
+            outs[impl] = np.asarray(new_pop)
+        np.testing.assert_array_equal(outs["pallas"], outs["pallas_tiled"])
+
+    def test_pallas_impl_auto_routes_beyond_vmem_budget(self):
+        """impl='pallas' must hand off to the tiled engine once the untiled
+        working-set estimate exceeds the VMEM budget (the routing itself —
+        the actual beyond-VMEM run is benchmark territory)."""
+        from repro.kernels.ga import ops
+        assert ops.untiled_vmem_bytes(64, 128) <= ops.VMEM_BUDGET_BYTES
+        assert ops.untiled_vmem_bytes(65536, 1024) > ops.VMEM_BUDGET_BYTES
+        # f15 fused raises the estimate (perm one-hot + rotated copies)
+        spec = ops.make_spec(EAConfig(max_pop=8, min_pop=8),
+                             GenomeSpec("float", 1000, -5.0, 5.0),
+                             fused={"eval": "f15", "m": 50, "n_groups": 20})
+        assert (ops.untiled_vmem_bytes(10_000, 1000, spec)
+                > ops.VMEM_BUDGET_BYTES)
+
+
+class TestPrngTiling:
+    K = (jnp.uint32(0x1234), jnp.uint32(0x5678))
+
+    def test_counter_offsets_tile_into_full_stream(self):
+        """A tile drawn with (offset, row_stride) reads the exact window of
+        the full-array stream — the property the grid kernel rides on."""
+        full = np.asarray(prng.random_bits(*self.K, (16, 24), salt=9,
+                                           row_stride=24))
+        for r0, c0, h, w in ((0, 0, 8, 12), (8, 12, 8, 12), (8, 0, 4, 24),
+                             (4, 4, 8, 8)):
+            tile = np.asarray(prng.random_bits(*self.K, (h, w), salt=9,
+                                               offset=(r0, c0),
+                                               row_stride=24))
+            np.testing.assert_array_equal(full[r0:r0 + h, c0:c0 + w], tile)
+
+    def test_negative_row_offset_wraps_consistently(self):
+        """Child draws address rows relative to the elite offset; a
+        negative row0 must wrap identically to the full draw starting
+        there."""
+        a = np.asarray(prng.uniform(*self.K, (8, 8), salt=3,
+                                    offset=(-2, 0), row_stride=8))
+        b = np.asarray(prng.uniform(*self.K, (4, 8), salt=3,
+                                    offset=(-2, 0), row_stride=8))
+        np.testing.assert_array_equal(a[:4], b)
+
+
+class TestAutotune:
+    def test_cache_roundtrip_and_reuse(self, tmp_path):
+        from repro.kernels.ga import autotune
+        path = tmp_path / "autotune_ga.json"
+        tp, tl = autotune.best_tiles(4096, 1024, "float", cache_path=path)
+        assert (tp, tl) in autotune.CANDIDATES
+        cache = autotune.load_cache(path)
+        assert autotune.device_kind() in cache
+        entry = cache[autotune.device_kind()]
+        assert (entry["tile_pop"], entry["tile_len"]) == (tp, tl)
+        # second call is served from the cache file
+        assert autotune.best_tiles(4096, 1024, "float",
+                                   cache_path=path) == (tp, tl)
+        summary = autotune.cache_summary(path)
+        assert autotune.device_kind() in summary["entries"]
+
+    def test_force_resweeps(self, tmp_path):
+        from repro.kernels.ga import autotune
+        path = tmp_path / "autotune_ga.json"
+        autotune.save_cache({autotune.device_kind(): {
+            "tile_pop": 1, "tile_len": 1, "timed": False,
+            "kind": "float", "shape": [1, 1]}}, path)
+        assert autotune.best_tiles(256, 256, "float",
+                                   cache_path=path) == (1, 1)
+        tp, tl = autotune.best_tiles(256, 256, "float", cache_path=path,
+                                     force=True)
+        assert (tp, tl) in autotune.CANDIDATES
+
+
+# ---------------------------------------------------------------------------
 # Driver-level parity: fused scan, async fire masks
 # ---------------------------------------------------------------------------
 def _assert_trees_equal(a, b):
@@ -283,6 +476,7 @@ class TestDrivers:
                                    max_epochs=3, rng=jax.random.key(0),
                                    w2=True)
         _assert_trees_equal(outs["pallas"][:2], outs["pallas_ref"][:2])
+        _assert_trees_equal(outs["pallas"][:2], outs["pallas_tiled"][:2])
 
     def test_run_fused_async_parity_under_fire_masks(self):
         """Heterogeneous clocks + churn: the fire-masked pallas engine is
@@ -300,6 +494,7 @@ class TestDrivers:
                                          rng=jax.random.key(0), w2=True,
                                          return_astate=True)
         _assert_trees_equal(outs["pallas"], outs["pallas_ref"])
+        _assert_trees_equal(outs["pallas"], outs["pallas_tiled"])
 
     def test_non_firing_islands_inert(self):
         """A tick in which no island's clock crosses the period must leave
