@@ -205,10 +205,10 @@ def _bench_generation(impl: str, n: int, L: int, kind: str,
     cfg = EAConfig(max_pop=n, min_pop=min(8, n),
                    crossover="two_point" if kind == "binary" else "blend",
                    impl=impl)
-    rng = jax.random.key(0)
-    pop = (jax.random.bernoulli(rng, 0.5, (n, L)).astype(jnp.int8)
+    k_init, k_step = jax.random.split(jax.random.key(0))
+    pop = (jax.random.bernoulli(k_init, 0.5, (n, L)).astype(jnp.int8)
            if kind == "binary"
-           else jax.random.uniform(rng, (n, L), jnp.float32, -5.0, 5.0))
+           else jax.random.uniform(k_init, (n, L), jnp.float32, -5.0, 5.0))
     fit = pop.astype(jnp.float32).sum(-1)
     kern = gk.get_kernel("generation", kind, impl)
     kwargs = {}
@@ -216,11 +216,12 @@ def _bench_generation(impl: str, n: int, L: int, kind: str,
         kwargs = {"tile_pop": tile_pop, "tile_len": tile_len}
     step = jax.jit(lambda k: kern(k, pop, fit, jnp.int32(n), cfg, genome,
                                   **kwargs))
-    step(rng).block_until_ready()  # compile + warm-up
+    step(k_step).block_until_ready()  # compile + warm-up
     times = []
     for _ in range(repeats):
         t0 = time.perf_counter()
-        step(rng).block_until_ready()
+        # repro-lint: disable=RNG01 -- same key every repeat on purpose: each sample must time identical work
+        step(k_step).block_until_ready()
         times.append(time.perf_counter() - t0)
     return float(np.median(times))
 

@@ -26,7 +26,7 @@ def main(argv=None) -> None:
                          "genome length x generation-engine impl)")
     args = ap.parse_args(argv)
     from benchmarks import hostmeta
-    t0 = time.time()
+    t0 = time.perf_counter()
 
     if "fig3" not in args.skip:
         print("== Fig 3: trap-40 baseline (time/evals to solution) ==")
@@ -130,7 +130,7 @@ def main(argv=None) -> None:
             print(f"roofline unavailable: {e}")
         print()
 
-    print(f"total benchmark wall time: {time.time()-t0:.1f}s")
+    print(f"total benchmark wall time: {time.perf_counter()-t0:.1f}s")
 
 
 if __name__ == "__main__":

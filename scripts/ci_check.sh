@@ -36,6 +36,12 @@ export XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}"
 
 KNOWN_FAILING=()
 
+echo "== repro-lint (AST invariant analyzer: RNG/lock/purity/registry/donation) =="
+# selfcheck first: a silently broken analyzer must not green-light the tree
+python -m repro.analysis --selfcheck
+python -m repro.analysis --format github --baseline analysis_baseline.json \
+    src/ benchmarks/ examples/
+
 echo "== tier-1 tests =="
 python -m pytest -x -q ${KNOWN_FAILING[@]+"${KNOWN_FAILING[@]/#/--ignore=}"}
 

@@ -1,0 +1,59 @@
+"""repro-lint: AST invariant analyzer for the five-axis engine.
+
+A stdlib-``ast`` static-analysis pass framework encoding the invariants
+this codebase already paid to learn (PR-3's TOCTOU sweep, PR-5's
+bit-identical tiling RNG) so CI fails the moment a PR reintroduces one
+of the bug classes:
+
+======  =====================================================================
+rule    invariant
+======  =====================================================================
+RNG01   jax.random key discipline — one key, one sink. A key binding
+        consumed by two sinks (sampler / split / arbitrary callee) without
+        an intervening re-bind, or a key bound outside a loop and consumed
+        inside it, breaks replica determinism and the tiling-invariant
+        counter RNG.
+RNG02   no wall-clock / global-RNG nondeterminism (``time.time``,
+        ``random.*`` module state, unseeded ``np.random.*``) in the seeded
+        measurement/evolution paths (core/, kernels/, benchmarks/).
+LCK01   lock discipline — an attribute ever written under ``with
+        self._lock`` must never be read or written outside it (the exact
+        PR-3 TOCTOU class, re-checked mechanically).
+PAL01   Pallas kernel purity — no prints, host I/O, ``np.*`` math,
+        global/nonlocal mutation or ``.item()``/``float()`` coercions in a
+        ``pallas_call`` kernel body or anything it calls.
+JIT01   jit purity — the same side-effect markers in functions reachable
+        from ``jax.jit`` / ``fused_jit`` / ``shard_map`` call sites.
+REG01   registry contracts — every ``@register_kernel`` / topology /
+        acceptance registration matches its protocol signature.
+REG02   registry completeness — the (op x genome_kind x impl) kernel
+        matrix and the acceptance host-mirror set have no silent holes.
+REG03   acceptance dispatch — every pool insert site threads an
+        acceptance policy (``acc=``/``acceptance=``) instead of silently
+        bypassing the engine.
+DON01   donation discipline — an argument covered by ``donate_argnums``
+        is never referenced after the donating call.
+LNT01   lint hygiene — a ``# repro-lint: disable=`` pragma must carry a
+        ``-- reason`` justification (unsuppressible).
+======  =====================================================================
+
+Suppression: inline ``# repro-lint: disable=RULE  -- reason`` pragmas (on
+the offending line or the line above), or a committed
+``analysis_baseline.json`` whose entries each carry a one-line
+justification.  CLI: ``python -m repro.analysis [--format text|github]
+[--baseline ...] paths...`` — exits nonzero on any non-baselined finding.
+"""
+from .findings import Baseline, Finding, parse_pragmas
+from .engine import ALL_PASSES, analyze_paths, collect_python_files
+from .symbols import ModuleInfo, Project
+
+__all__ = [
+    "ALL_PASSES",
+    "Baseline",
+    "Finding",
+    "ModuleInfo",
+    "Project",
+    "analyze_paths",
+    "collect_python_files",
+    "parse_pragmas",
+]

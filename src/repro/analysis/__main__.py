@@ -1,0 +1,135 @@
+"""CLI: ``python -m repro.analysis [options] paths...``
+
+Exits 0 when every finding is pragma- or baseline-suppressed, 1 when any
+active finding (or parse error, or reasonless pragma) remains, 2 on bad
+invocation.  ``--format github`` emits ``::error`` workflow commands.
+
+``--selfcheck`` writes known-bad snippets (a key-reuse RNG violation and
+an unlocked read of locked state) to a scratch directory, runs the
+analyzer over them, and exits 0 only if both are caught — CI runs it so
+a silently broken analyzer cannot green-light the tree.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+
+from .engine import analyze_paths
+from .findings import Baseline
+
+DEFAULT_BASELINE = "analysis_baseline.json"
+
+SELFCHECK_SNIPPETS = {
+    "bad_rng.py": (
+        "import jax\n"
+        "\n"
+        "\n"
+        "def sample_twice(rng):\n"
+        "    a = jax.random.normal(rng, (4,))\n"
+        "    b = jax.random.uniform(rng, (4,))\n"
+        "    return a + b\n"
+    ),
+    "bad_lock.py": (
+        "import threading\n"
+        "\n"
+        "\n"
+        "class Server:\n"
+        "    def __init__(self):\n"
+        "        self._lock = threading.Lock()\n"
+        "        self._up = True\n"
+        "\n"
+        "    def kill(self):\n"
+        "        with self._lock:\n"
+        "            self._up = False\n"
+        "\n"
+        "    def is_up(self):\n"
+        "        return self._up\n"
+    ),
+}
+SELFCHECK_EXPECT = {"bad_rng.py": "RNG01", "bad_lock.py": "LCK01"}
+
+
+def _selfcheck() -> int:
+    with tempfile.TemporaryDirectory(prefix="repro_lint_selfcheck_") as tmp:
+        for name, src in SELFCHECK_SNIPPETS.items():
+            with open(os.path.join(tmp, name), "w") as fh:
+                fh.write(src)
+        result = analyze_paths([tmp], root=tmp)
+        hits = {f.path: f.rule_id for f in result["active"]}
+        ok = True
+        for name, rule in SELFCHECK_EXPECT.items():
+            if hits.get(name) != rule:
+                ok = False
+                print(f"selfcheck FAILED: expected {rule} in {name}, "
+                      f"got {hits.get(name)!r}", file=sys.stderr)
+        if ok:
+            print(f"selfcheck OK: analyzer caught "
+                  f"{sorted(set(hits.values()))} in seeded snippets")
+            return 0
+        return 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro-lint: AST invariant analyzer "
+                    "(RNG/lock/purity/registry/donation discipline)")
+    ap.add_argument("paths", nargs="*", help="files or directories")
+    ap.add_argument("--format", choices=("text", "github"), default="text")
+    ap.add_argument("--baseline", default=None,
+                    help=f"suppression file (default: ./{DEFAULT_BASELINE} "
+                         f"if present; 'none' disables)")
+    ap.add_argument("--root", default=None,
+                    help="anchor for repo-relative paths (default: CWD)")
+    ap.add_argument("--selfcheck", action="store_true",
+                    help="verify the analyzer catches seeded violations")
+    args = ap.parse_args(argv)
+
+    if args.selfcheck:
+        return _selfcheck()
+    if not args.paths:
+        ap.print_usage(sys.stderr)
+        print("error: no paths given", file=sys.stderr)
+        return 2
+
+    baseline = None
+    bl_path = args.baseline
+    if bl_path != "none":
+        if bl_path is None and os.path.isfile(DEFAULT_BASELINE):
+            bl_path = DEFAULT_BASELINE
+        if bl_path is not None:
+            if not os.path.isfile(bl_path):
+                print(f"error: baseline {bl_path!r} not found",
+                      file=sys.stderr)
+                return 2
+            try:
+                baseline = Baseline.load(bl_path)
+            except ValueError as exc:
+                print(f"error: bad baseline: {exc}", file=sys.stderr)
+                return 2
+
+    result = analyze_paths(args.paths, root=args.root, baseline=baseline)
+    active = result["errors"] + result["active"]
+    for f in active:
+        print(f.format(args.format))
+
+    n_sup = len(result["suppressed"])
+    stale = baseline.unused() if baseline is not None else []
+    for e in stale:
+        msg = (f"stale baseline entry: {e['rule']} at {e['path']} "
+               f"(snippet {e['snippet']!r}) no longer matches any "
+               f"finding — remove it")
+        print(msg if args.format == "text"
+              else f"::warning title=stale-baseline::{msg}")
+
+    summary = (f"repro-lint: {len(active)} finding(s), "
+               f"{n_sup} suppressed, {len(stale)} stale baseline entr"
+               f"{'y' if len(stale) == 1 else 'ies'}")
+    print(summary, file=sys.stderr if active else sys.stdout)
+    return 1 if active else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,4 @@
+"""repro-lint passes. Each module exposes ``run(project) -> [Finding]``."""
+from . import donation, locks, purity, registry, rng  # noqa: F401
+
+__all__ = ["donation", "locks", "purity", "registry", "rng"]

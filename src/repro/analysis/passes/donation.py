@@ -1,0 +1,173 @@
+"""Pass 5 — donation/aliasing discipline (DON01).
+
+``jax.jit(..., donate_argnums=(...))`` hands the donated buffers back to
+XLA; touching the python handle afterwards reads deallocated (or
+aliased-over) memory and jax only *warns* — under a benchmark loop the
+warning scrolls away and the numbers silently measure garbage.
+
+Per function scope, lexically:
+
+* any local name bound to an expression whose subtree contains a
+  ``jax.jit(..., donate_argnums=...)`` call (this is how the repo's
+  ``fused_jit(problem, key, lambda: jax.jit(partial(...), donate_argnums=
+  (0, 1)))`` memoization reads) is treated as a donating callable with
+  those argument positions;
+* at each call of that callable, the *names* passed in donated positions
+  become invalid after the call line — a later read of such a name,
+  without an intervening re-bind, is flagged.  Re-binding (the
+  ``state = step(state, ...)`` carry idiom) revalidates immediately
+  because the call's loads happen before the assignment's store.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from ..findings import Finding
+from ..symbols import ModuleInfo, Project, iter_functions
+
+JIT_TAILS = {"jit", "pjit"}
+
+
+def _donated_positions(module: ModuleInfo, expr: ast.AST,
+                       ) -> Optional[Tuple[int, ...]]:
+    """donate_argnums of any jax.jit call inside ``expr``'s subtree."""
+    for node in ast.walk(expr):
+        if not isinstance(node, ast.Call):
+            continue
+        tail = (module.call_name(node) or "").split(".")[-1]
+        if tail not in JIT_TAILS:
+            continue
+        for kw in node.keywords:
+            if kw.arg not in ("donate_argnums", "donate_argnames"):
+                continue
+            val = kw.value
+            if isinstance(val, ast.Constant) and isinstance(val.value, int):
+                return (val.value,)
+            if isinstance(val, (ast.Tuple, ast.List)):
+                out = []
+                for el in val.elts:
+                    if isinstance(el, ast.Constant) \
+                            and isinstance(el.value, int):
+                        out.append(el.value)
+                if out:
+                    return tuple(out)
+    return None
+
+
+class _Scope:
+    def __init__(self, module: ModuleInfo, fn: ast.FunctionDef):
+        self.m = module
+        self.fn = fn
+        self.donators: Dict[str, Tuple[int, ...]] = {}
+        self.dead: Dict[str, int] = {}   # name -> line it was donated at
+        self.findings: List[Finding] = []
+
+    def run(self) -> List[Finding]:
+        self._walk_block(self.fn.body)
+        return self.findings
+
+    # -- linear walk, loads before stores per statement ----------------------
+    def _walk_block(self, stmts: List[ast.stmt]) -> None:
+        for st in stmts:
+            self._walk_stmt(st)
+
+    def _walk_stmt(self, st: ast.stmt) -> None:
+        if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                           ast.ClassDef)):
+            return
+        if isinstance(st, ast.Assign):
+            self._visit_expr(st.value)
+            pos = _donated_positions(self.m, st.value)
+            for t in st.targets:
+                self._store_target(t)
+            if pos is not None and len(st.targets) == 1 \
+                    and isinstance(st.targets[0], ast.Name):
+                self.donators[st.targets[0].id] = pos
+            return
+        if isinstance(st, (ast.AugAssign, ast.AnnAssign)):
+            if st.value is not None:
+                self._visit_expr(st.value)
+            self._store_target(st.target)
+            return
+        if isinstance(st, (ast.For, ast.AsyncFor)):
+            self._visit_expr(st.iter)
+            self._store_target(st.target)
+            # two passes over the body: catches donated-in-iteration-1,
+            # read-in-iteration-2 without a re-bind
+            self._walk_block(st.body)
+            self._walk_block(st.body)
+            self._walk_block(st.orelse)
+            return
+        if isinstance(st, ast.While):
+            self._visit_expr(st.test)
+            self._walk_block(st.body)
+            self._walk_block(st.body)
+            self._walk_block(st.orelse)
+            return
+        if isinstance(st, ast.If):
+            self._visit_expr(st.test)
+            dead_before = dict(self.dead)
+            self._walk_block(st.body)
+            dead_body = self.dead
+            self.dead = dict(dead_before)
+            self._walk_block(st.orelse)
+            # conservative join: dead in either arm stays dead
+            self.dead.update(dead_body)
+            return
+        if isinstance(st, (ast.With, ast.AsyncWith)):
+            for item in st.items:
+                self._visit_expr(item.context_expr)
+                if item.optional_vars is not None:
+                    self._store_target(item.optional_vars)
+            self._walk_block(st.body)
+            return
+        if isinstance(st, ast.Try):
+            self._walk_block(st.body)
+            for h in st.handlers:
+                self._walk_block(h.body)
+            self._walk_block(st.orelse)
+            self._walk_block(st.finalbody)
+            return
+        for child in ast.iter_child_nodes(st):
+            if isinstance(child, ast.expr):
+                self._visit_expr(child)
+
+    def _store_target(self, target: ast.AST) -> None:
+        if isinstance(target, ast.Name):
+            self.dead.pop(target.id, None)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self._store_target(el)
+        elif isinstance(target, ast.Starred):
+            self._store_target(target.value)
+
+    def _visit_expr(self, expr: ast.AST) -> None:
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+                if node.id in self.dead:
+                    self.findings.append(Finding(
+                        "DON01", self.m.relpath, node.lineno,
+                        f"{node.id!r} was donated to a jitted call at "
+                        f"line {self.dead[node.id]} (donate_argnums) and "
+                        f"is read here without re-binding — its buffer "
+                        f"belongs to XLA now"))
+                    del self.dead[node.id]  # one report per donation
+        # process donations after recording loads (args load first)
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+                pos = self.donators.get(node.func.id)
+                if pos is None:
+                    continue
+                for p in pos:
+                    if p < len(node.args) \
+                            and isinstance(node.args[p], ast.Name):
+                        self.dead[node.args[p].id] = node.lineno
+
+
+def run(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    for module in project.modules:
+        for _, fn in iter_functions(module):
+            findings.extend(_Scope(module, fn).run())
+    return findings

@@ -1,0 +1,154 @@
+"""Pass 2 — lock discipline (LCK01): the mechanized PR-3 TOCTOU check.
+
+For every class that owns a ``threading.Lock``/``RLock`` attribute
+(``self._lock = threading.Lock()`` in ``__init__``), collect the set of
+instance attributes that are ever *written* inside a ``with self._lock:``
+block in any method.  Those attributes form the class's locked state;
+any read or write of them lexically outside a lock block (in any method
+other than ``__init__``, which happens-before publication) is flagged.
+
+This is exactly the bug class PR 3 paid to find by test: a liveness /
+counter / cursor read outside the lock racing a locked writer
+(``kill()``/``revive()`` vs an unlocked ``up`` pre-check).  Helper
+methods that are only ever called with the lock held are legitimate —
+mark them with ``# repro-lint: disable=LCK01 -- <why>`` at the access.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set, Tuple
+
+from ..findings import Finding
+from ..symbols import ModuleInfo, Project
+
+LOCK_TYPES = {"Lock", "RLock", "Condition"}
+
+
+def _lock_attrs(cls: ast.ClassDef, module: ModuleInfo) -> Set[str]:
+    """Attribute names assigned from threading.Lock()/RLock() anywhere in
+    the class body (usually __init__)."""
+    out: Set[str] = set()
+    for node in ast.walk(cls):
+        if not isinstance(node, ast.Assign) or not isinstance(
+                node.value, ast.Call):
+            continue
+        name = module.call_name(node.value) or ""
+        parts = name.split(".")
+        if parts[-1] in LOCK_TYPES and (len(parts) == 1
+                                        or parts[0] == "threading"):
+            for t in node.targets:
+                if isinstance(t, ast.Attribute) and isinstance(
+                        t.value, ast.Name) and t.value.id == "self":
+                    out.add(t.attr)
+    return out
+
+
+def _self_attr(node: ast.AST) -> str:
+    """'attr' for a ``self.attr`` expression, else ''."""
+    if isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name) \
+            and node.value.id == "self":
+        return node.attr
+    return ""
+
+
+class _MethodScan(ast.NodeVisitor):
+    """Record self-attribute accesses split by lock-held status."""
+
+    def __init__(self, lock_attrs: Set[str]):
+        self.lock_attrs = lock_attrs
+        self.depth = 0
+        # attr -> [(line, inside_lock, is_write)]
+        self.accesses: List[Tuple[str, int, bool, bool]] = []
+
+    def _is_lock_ctx(self, expr: ast.AST) -> bool:
+        a = _self_attr(expr)
+        if a in self.lock_attrs:
+            return True
+        # self._lock.acquire()-style guards are not `with` blocks; only
+        # `with self._lock:` (optionally aliased) counts as held here.
+        return False
+
+    def visit_With(self, node: ast.With) -> None:
+        held = any(self._is_lock_ctx(item.context_expr)
+                   for item in node.items)
+        for item in node.items:
+            self.visit(item.context_expr)
+        if held:
+            self.depth += 1
+        for st in node.body:
+            self.visit(st)
+        if held:
+            self.depth -= 1
+
+    visit_AsyncWith = visit_With
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        attr = _self_attr(node)
+        if attr and attr not in self.lock_attrs:
+            is_write = isinstance(node.ctx, (ast.Store, ast.Del))
+            self.accesses.append(
+                (attr, node.lineno, self.depth > 0, is_write))
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node):  # nested defs: new method context,
+        pass                            # handled separately by the caller
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+    visit_Lambda = visit_FunctionDef
+
+
+def _scan_class(module: ModuleInfo, cls: ast.ClassDef) -> List[Finding]:
+    lock_attrs = _lock_attrs(cls, module)
+    if not lock_attrs:
+        return []
+    per_method: Dict[str, _MethodScan] = {}
+    for node in cls.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            scan = _MethodScan(lock_attrs)
+            for st in node.body:
+                scan.visit(st)
+            per_method[node.name] = scan
+            # nested defs inside a method (worker closures) run on their
+            # own thread context — scan them as their own pseudo-methods
+            for sub in ast.walk(node):
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and sub is not node:
+                    subscan = _MethodScan(lock_attrs)
+                    for st in sub.body:
+                        subscan.visit(st)
+                    per_method[f"{node.name}.<locals>.{sub.name}"] = subscan
+
+    # locked state = attrs ever written while holding the lock
+    locked_state: Set[str] = set()
+    for name, scan in per_method.items():
+        if name.split(".")[0] in ("__init__", "__new__"):
+            continue
+        for attr, _, inside, is_write in scan.accesses:
+            if inside and is_write:
+                locked_state.add(attr)
+    if not locked_state:
+        return []
+
+    findings: List[Finding] = []
+    for name, scan in per_method.items():
+        if name.split(".")[0] in ("__init__", "__new__"):
+            continue
+        for attr, line, inside, is_write in scan.accesses:
+            if attr in locked_state and not inside:
+                verb = "written" if is_write else "read"
+                findings.append(Finding(
+                    "LCK01", module.relpath, line,
+                    f"{cls.name}.{attr} is written under "
+                    f"`with self.<lock>` elsewhere but {verb} here "
+                    f"without the lock (method {name}) — the PR-3 "
+                    f"TOCTOU class"))
+    return findings
+
+
+def run(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    for module in project.modules:
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.ClassDef):
+                findings.extend(_scan_class(module, node))
+    return findings

@@ -1,0 +1,203 @@
+"""Pass 3 — jit/Pallas purity (PAL01 / JIT01).
+
+Roots:
+
+* **Pallas kernel bodies** — the callable handed to ``pl.pallas_call``
+  (a name, or ``partial(name, ...)``).  Everything lexically reachable
+  from a kernel body through the project callgraph is kernel context.
+* **jit-traced functions** — the callable handed to ``jax.jit`` /
+  ``pjit`` / ``shard_map`` (again unwrapping ``partial`` and one level of
+  local-variable indirection, and looking inside ``lambda:`` builder
+  bodies — the ``fused_jit`` memoization pattern).
+
+Flagged inside kernel context (PAL01): ``print``/``input``, ``open``/
+file I/O, ``global``/``nonlocal`` declarations, any ``np.*`` call (a
+kernel body computes in ``jnp``/``pl`` — host numpy on a Ref is a trace
+error at best and a silent host round-trip in interpret mode), and
+``.item()`` / ``float()/int()/bool()`` coercions of function parameters.
+
+Flagged inside jit context (JIT01): the same minus the ``np.*`` rule —
+host numpy on *static* python values (shape math) is idiomatic in traced
+drivers, so only direct coercions of parameters and the unambiguous
+side-effect markers (print/open/global/time.* calls) are reported.
+``jax.debug.print`` / ``pl.debug_print`` / ``io_callback`` are the
+sanctioned escape hatches and stay exempt.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from ..findings import Finding
+from ..symbols import (FunctionEntry, ModuleInfo, Project, iter_functions,
+                       unwrap_partial)
+
+JIT_WRAPPERS_TAIL = {"jit", "pjit"}
+SHARD_TAIL = {"shard_map"}
+PALLAS_TAIL = {"pallas_call"}
+DEBUG_OK = {"debug_print", "print_rank", "io_callback", "pure_callback",
+            "debug_callback"}
+
+
+def _local_env(fn: ast.FunctionDef) -> Dict[str, ast.AST]:
+    env: Dict[str, ast.AST] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            env[node.targets[0].id] = node.value
+    return env
+
+
+def _callable_names(module: ModuleInfo, expr: ast.AST,
+                    env: Dict[str, ast.AST], depth: int = 0) -> List[str]:
+    """Dotted names of the callables an expression may denote."""
+    if depth > 4:
+        return []
+    expr = unwrap_partial(module, expr)
+    if isinstance(expr, ast.Name) and expr.id in env:
+        return _callable_names(module, env[expr.id], env, depth + 1)
+    if isinstance(expr, (ast.Name, ast.Attribute)):
+        name = module.dotted(expr)
+        return [name] if name else []
+    if isinstance(expr, ast.Lambda):
+        out: List[str] = []
+        for sub in ast.walk(expr.body):
+            if isinstance(sub, ast.Call):
+                tail = (module.call_name(sub) or "").split(".")[-1]
+                if tail in JIT_WRAPPERS_TAIL | SHARD_TAIL and sub.args:
+                    out.extend(_callable_names(module, sub.args[0], env,
+                                               depth + 1))
+        return out
+    if isinstance(expr, ast.Call):
+        # jit(fn)(...) or a builder call: look at its first argument
+        tail = (module.call_name(expr) or "").split(".")[-1]
+        if tail in JIT_WRAPPERS_TAIL | SHARD_TAIL and expr.args:
+            return _callable_names(module, expr.args[0], env, depth + 1)
+    return []
+
+
+def _collect_roots(project: Project) -> Tuple[Set[str], Set[str]]:
+    """(pallas_roots, jit_roots) as project-qualified function keys."""
+    pallas: Set[str] = set()
+    jit: Set[str] = set()
+    for module in project.modules:
+        for _, fn in iter_functions(module):
+            env = _local_env(fn)
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                tail = (module.call_name(node) or "").split(".")[-1]
+                if tail in PALLAS_TAIL and node.args:
+                    for name in _callable_names(module, node.args[0], env):
+                        entry = project.resolve_function(module, name)
+                        if entry:
+                            pallas.add(f"{entry.module.name}."
+                                       f"{entry.qualname}")
+                elif tail in JIT_WRAPPERS_TAIL | SHARD_TAIL and node.args:
+                    for name in _callable_names(module, node.args[0], env):
+                        entry = project.resolve_function(module, name)
+                        if entry:
+                            jit.add(f"{entry.module.name}."
+                                    f"{entry.qualname}")
+    return pallas, jit
+
+
+def _callees(project: Project, entry: FunctionEntry) -> List[FunctionEntry]:
+    out = []
+    for node in ast.walk(entry.node):
+        if isinstance(node, ast.Call):
+            name = entry.module.call_name(node)
+            if not name:
+                continue
+            callee = project.resolve_function(entry.module, name)
+            if callee:
+                out.append(callee)
+    return out
+
+
+def _reachable(project: Project, roots: Set[str]) -> Dict[str, str]:
+    """BFS over the project callgraph: function key -> root it came from."""
+    seen: Dict[str, str] = {}
+    frontier = [(r, r) for r in roots]
+    while frontier:
+        key, root = frontier.pop()
+        if key in seen:
+            continue
+        seen[key] = root
+        entry = project.func_index.get(key)
+        if entry is None:
+            continue
+        for callee in _callees(project, entry):
+            ckey = f"{callee.module.name}.{callee.qualname}"
+            if ckey not in seen:
+                frontier.append((ckey, root))
+    return seen
+
+
+def _impurities(entry: FunctionEntry, kernel_ctx: bool,
+                rule: str, root: str) -> List[Finding]:
+    m = entry.module
+    fn = entry.node
+    params = {a.arg for a in (fn.args.posonlyargs + fn.args.args
+                              + fn.args.kwonlyargs)}
+    out: List[Finding] = []
+
+    def flag(line: int, what: str) -> None:
+        ctx = "Pallas kernel body" if kernel_ctx else "jit-traced function"
+        out.append(Finding(
+            rule, m.relpath, line,
+            f"{what} in {ctx} {fn.name!r} (reachable from {root.split('.')[-1]})"))
+
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.Global, ast.Nonlocal)):
+            flag(node.lineno, f"{type(node).__name__.lower()} declaration")
+        elif isinstance(node, ast.Call):
+            name = m.call_name(node) or ""
+            tail = name.split(".")[-1]
+            if tail in DEBUG_OK or name.startswith("jax.debug."):
+                continue
+            if name in ("print", "input"):
+                flag(node.lineno, f"{name}() side effect")
+            elif name == "open":
+                flag(node.lineno, "host file I/O (open())")
+            elif name.startswith("time.") and tail != "perf_counter_ns" \
+                    and not kernel_ctx and tail in ("time", "sleep",
+                                                    "perf_counter",
+                                                    "monotonic"):
+                flag(node.lineno, f"host clock call {name}()")
+            elif kernel_ctx and name.startswith("numpy.") \
+                    and tail not in ("dtype", "float32", "int32", "uint32",
+                                     "bool_", "float64", "int64"):
+                flag(node.lineno, f"host numpy call {name}()")
+            elif tail == "item" and isinstance(node.func, ast.Attribute):
+                flag(node.lineno, "`.item()` host coercion")
+            elif name in ("float", "int", "bool") and len(node.args) == 1 \
+                    and isinstance(node.args[0], ast.Name) \
+                    and node.args[0].id in params:
+                flag(node.lineno,
+                     f"{name}() coercion of parameter "
+                     f"{node.args[0].id!r} (host sync on a traced value)")
+    return out
+
+
+def run(project: Project) -> List[Finding]:
+    pallas_roots, jit_roots = _collect_roots(project)
+    pallas_reach = _reachable(project, pallas_roots)
+    jit_reach = _reachable(project, jit_roots)
+    findings: List[Finding] = []
+    seen_lines: Set[Tuple[str, int, str]] = set()
+
+    for reach, kernel_ctx, rule in ((pallas_reach, True, "PAL01"),
+                                    (jit_reach, False, "JIT01")):
+        for key, root in reach.items():
+            if not kernel_ctx and key in pallas_reach:
+                continue  # kernel context wins; don't double-report
+            entry = project.func_index.get(key)
+            if entry is None:
+                continue
+            for f in _impurities(entry, kernel_ctx, rule, root):
+                dedup = (f.path, f.line, f.rule_id)
+                if dedup not in seen_lines:
+                    seen_lines.add(dedup)
+                    findings.append(f)
+    return findings

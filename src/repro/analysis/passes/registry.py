@@ -1,0 +1,238 @@
+"""Pass 4 — registry contracts (REG01/REG02/REG03).
+
+REG01 — every ``@register_kernel(op, kind, impl)`` /
+``@register_topology(name)`` / ``@register_policy(name)`` decoration is
+checked against its protocol signature:
+
+* kernel ``generation``: 6 positional params
+  ``(rng, pop, fitness, pop_size, cfg, genome)``;
+  ``generation_eval``: 7 (``... fused``); extra *keyword-only* params
+  with defaults (``interpret=``, ``consts=``, tile sizes) are fine.
+* topology: >= 4 positional ``(pool, bests_genome, bests_fitness, rng)``
+  plus keyword-only ``{mig, axis, epoch, available}`` (or ``**kwargs``).
+* acceptance policy: 6 positional ``(pool_genomes, pool_fitness,
+  cand_genomes, cand_fitness, cand_valid, rng)`` plus keyword-only
+  ``{ptr, count, acc}`` (or ``**kwargs``).
+
+REG02 — completeness matrices with explicit exemptions via the baseline:
+the kernel (op x genome_kind x impl) cube must be full for every impl
+that appears at all (a half-registered impl dispatches fine in the smoke
+you wrote and KeyErrors in the driver you didn't), and every registered
+acceptance policy must appear in ``HOST_MIRRORED`` (PoolServer refuses
+non-mirrored policies at construction).
+
+REG03 — acceptance dispatch at insert sites: any call to
+``pool_put_batch`` / ``pool_insert_host`` outside ``core/pool.py`` and
+``core/acceptance.py`` must thread a policy (``acc=`` keyword) — a bare
+insert silently bypasses the acceptance engine at one site while every
+other site applies it.
+
+The statically-extracted matrices are exported via
+:func:`collect_registrations` so a runtime smoke can assert they match
+the imported registries at head.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+from ..findings import Finding
+from ..symbols import ModuleInfo, Project
+
+KERNEL_POSITIONAL = {"generation": 6, "generation_eval": 7}
+TOPOLOGY_KWONLY = {"mig", "axis", "epoch", "available"}
+POLICY_KWONLY = {"ptr", "count", "acc"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Registration:
+    family: str                 # kernel | topology | acceptance
+    key: Tuple[str, ...]        # (op, kind, impl) or (name,)
+    func: str
+    path: str
+    line: int
+
+
+def _const_args(call: ast.Call) -> Optional[Tuple[str, ...]]:
+    vals = []
+    for a in call.args:
+        if not (isinstance(a, ast.Constant) and isinstance(a.value, str)):
+            return None
+        vals.append(a.value)
+    return tuple(vals)
+
+
+def collect_registrations(project: Project) -> List[Registration]:
+    regs: List[Registration] = []
+    for module in project.modules:
+        for node in ast.walk(module.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for dec in node.decorator_list:
+                if not isinstance(dec, ast.Call):
+                    continue
+                tail = (module.call_name(dec) or "").split(".")[-1]
+                family = {"register_kernel": "kernel",
+                          "register_topology": "topology",
+                          "register_policy": "acceptance"}.get(tail)
+                if family is None:
+                    continue
+                key = _const_args(dec)
+                if key is None:
+                    continue
+                regs.append(Registration(family, key, node.name,
+                                         module.relpath, dec.lineno))
+    return regs
+
+
+def _sig(node: ast.FunctionDef) -> Tuple[List[str], Set[str], bool, bool]:
+    pos = [a.arg for a in node.args.posonlyargs + node.args.args]
+    kwonly = {a.arg for a in node.args.kwonlyargs}
+    return pos, kwonly, node.args.vararg is not None, \
+        node.args.kwarg is not None
+
+
+def _check_signatures(project: Project, regs: List[Registration],
+                      ) -> List[Finding]:
+    findings: List[Finding] = []
+    # function defs by (path, name) for signature lookup
+    defs: Dict[Tuple[str, str], ast.FunctionDef] = {}
+    for module in project.modules:
+        for node in ast.walk(module.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs[(module.relpath, node.name)] = node
+
+    for reg in regs:
+        node = defs.get((reg.path, reg.func))
+        if node is None:
+            continue
+        pos, kwonly, has_vararg, has_kwarg = _sig(node)
+        if reg.family == "kernel" and len(reg.key) == 3:
+            op = reg.key[0]
+            want = KERNEL_POSITIONAL.get(op)
+            if want is not None and not has_vararg and len(pos) != want:
+                findings.append(Finding(
+                    "REG01", reg.path, reg.line,
+                    f"@register_kernel({', '.join(reg.key)}): "
+                    f"{reg.func} takes {len(pos)} positional params, "
+                    f"protocol for {op!r} requires {want} "
+                    f"(rng, pop, fitness, pop_size, cfg, genome"
+                    f"{', fused' if op == 'generation_eval' else ''})"))
+        elif reg.family == "topology":
+            missing = TOPOLOGY_KWONLY - kwonly if not has_kwarg else set()
+            if (len(pos) < 4 and not has_vararg) or missing:
+                findings.append(Finding(
+                    "REG01", reg.path, reg.line,
+                    f"@register_topology({reg.key[0]!r}): {reg.func} does "
+                    f"not match the Topology protocol "
+                    f"(need 4 positional (pool, bests_genome, "
+                    f"bests_fitness, rng) + keyword-only "
+                    f"{sorted(TOPOLOGY_KWONLY)}; missing "
+                    f"{sorted(missing) or 'positional params'})"))
+        elif reg.family == "acceptance":
+            missing = POLICY_KWONLY - kwonly if not has_kwarg else set()
+            if (len(pos) != 6 and not has_vararg) or missing:
+                findings.append(Finding(
+                    "REG01", reg.path, reg.line,
+                    f"@register_policy({reg.key[0]!r}): {reg.func} does "
+                    f"not match the AcceptancePolicy protocol (6 "
+                    f"positional (pool_genomes, pool_fitness, "
+                    f"cand_genomes, cand_fitness, cand_valid, rng) + "
+                    f"keyword-only {sorted(POLICY_KWONLY)}; missing "
+                    f"{sorted(missing) or 'positional arity'})"))
+    return findings
+
+
+def _host_mirrored(project: Project) -> Optional[Set[str]]:
+    """The HOST_MIRRORED tuple from core/acceptance.py, lexically."""
+    for module in project.modules:
+        if not module.relpath.endswith("core/acceptance.py"):
+            continue
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Assign) \
+                    and any(isinstance(t, ast.Name)
+                            and t.id == "HOST_MIRRORED"
+                            for t in node.targets) \
+                    and isinstance(node.value, (ast.Tuple, ast.List)):
+                vals = set()
+                for el in node.value.elts:
+                    if isinstance(el, ast.Constant):
+                        vals.add(el.value)
+                return vals
+    return None
+
+
+def _check_completeness(project: Project, regs: List[Registration],
+                        ) -> List[Finding]:
+    findings: List[Finding] = []
+    kernel_regs = [r for r in regs
+                   if r.family == "kernel" and len(r.key) == 3]
+    if kernel_regs:
+        ops = sorted({r.key[0] for r in kernel_regs})
+        kinds = sorted({r.key[1] for r in kernel_regs})
+        impls = sorted({r.key[2] for r in kernel_regs})
+        have = {r.key for r in kernel_regs}
+        first_site = {}
+        for r in kernel_regs:
+            first_site.setdefault(r.key[2], r)
+        for impl in impls:
+            missing = [(op, kind) for op in ops for kind in kinds
+                       if (op, kind, impl) not in have]
+            if missing:
+                site = first_site[impl]
+                findings.append(Finding(
+                    "REG02", site.path, site.line,
+                    f"kernel impl {impl!r} leaves completeness-matrix "
+                    f"holes: missing {missing} — drivers dispatching "
+                    f"those cells will KeyError at runtime"))
+
+    mirrored = _host_mirrored(project)
+    if mirrored is not None:
+        for r in regs:
+            if r.family == "acceptance" and r.key[0] not in mirrored:
+                findings.append(Finding(
+                    "REG02", r.path, r.line,
+                    f"acceptance policy {r.key[0]!r} is registered but "
+                    f"absent from HOST_MIRRORED — PoolServer(acceptance="
+                    f"...) will reject it at construction; add a numpy "
+                    f"mirror or exempt it in the baseline"))
+    return findings
+
+
+INSERT_SITES = {"pool_put_batch", "pool_insert_host"}
+INSERT_SITE_HOME = ("core/pool.py", "core/acceptance.py")
+
+
+def _check_insert_sites(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    for module in project.modules:
+        if module.relpath.endswith(INSERT_SITE_HOME):
+            continue
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            tail = (module.call_name(node) or "").split(".")[-1]
+            if tail not in INSERT_SITES:
+                continue
+            kwargs = {k.arg for k in node.keywords}
+            n_pos = len(node.args)
+            # acc reached positionally: put_batch(pool, g, f, valid, acc)
+            # = index 4; insert_host(pool, genomes, fits, acc) = index 3
+            acc_pos = 5 if tail == "pool_put_batch" else 4
+            if "acc" in kwargs or "acceptance" in kwargs \
+                    or n_pos >= acc_pos:
+                continue
+            findings.append(Finding(
+                "REG03", module.relpath, node.lineno,
+                f"{tail}() without an acceptance policy (acc=...) — this "
+                f"insert site bypasses the acceptance engine every other "
+                f"site dispatches"))
+    return findings
+
+
+def run(project: Project) -> List[Finding]:
+    regs = collect_registrations(project)
+    return (_check_signatures(project, regs)
+            + _check_completeness(project, regs)
+            + _check_insert_sites(project))

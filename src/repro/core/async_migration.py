@@ -501,19 +501,27 @@ class AsyncHostBridge(migration_lib.HostBridge):
             try:
                 if genome is not None:
                     self.server.put(genome, fitness, uuid=self.uuid)
-                    self.pushed += 1
-                entries, self._last_seq, dropped = self.server.get_since(
-                    self._last_seq, limit=self.pull)
-                self.dropped += dropped
+                    with self._flock:
+                        self.pushed += 1
+                # read the cursor under the lock, do server I/O outside
+                # it, publish results under it — the driver thread reads
+                # every one of these through stats()/_absorb_fetched
+                with self._flock:
+                    cursor = self._last_seq
+                entries, cursor, dropped = self.server.get_since(
+                    cursor, limit=self.pull)
                 fresh = [(e.genome.copy(), e.fitness) for e in entries
                          if e.uuid != self.uuid]
-                if fresh:
-                    with self._flock:
+                with self._flock:
+                    self._last_seq = cursor
+                    self.dropped += dropped
+                    if fresh:
                         self._fetched.extend(fresh)
             except Exception:  # noqa: BLE001 — any server-side failure is a
                 # lost XHR: count it and keep the worker alive (a dead
                 # worker would deadlock flush() on the unjoined queue)
-                self.lost += 1
+                with self._flock:
+                    self.lost += 1
             finally:
                 self._jobs.task_done()
 
@@ -547,8 +555,9 @@ class AsyncHostBridge(migration_lib.HostBridge):
         return self._absorb_fetched(pool)
 
     def stats(self):
-        out = super().stats()
-        out["dropped"] = self.dropped
+        with self._flock:
+            out = super().stats()
+            out["dropped"] = self.dropped
         return out
 
     def close(self):

@@ -101,9 +101,11 @@ class PoolServer:
 
     @property
     def up(self) -> bool:
-        return self._up
+        with self._lock:
+            return self._up
 
     def _check_up(self) -> None:
+        # repro-lint: disable=LCK01 -- every caller is a verb body that already holds self._lock
         if not self._up:
             raise PoolUnavailable("pool server is down")
 
@@ -119,6 +121,10 @@ class PoolServer:
         stats()['rejected'])."""
         with self._lock:
             self._check_up()
+            # stamp the experiment under the lock: reading it in the
+            # callers raced new_experiment() and could tag an entry with
+            # an epoch the locked insert no longer belongs to
+            entry.experiment = self._experiment
             self._n_puts += 1
             acc = self._acceptance
             if acc is None or acc.policy == "always":
@@ -155,14 +161,13 @@ class PoolServer:
     def put(self, genome: Any, fitness: float, uuid: int = 0) -> int:
         """PUT a chromosome. Returns the current experiment number."""
         return self._put(PoolEntry(np.asarray(genome), float(fitness),
-                                   int(uuid), self._experiment))
+                                   int(uuid), -1))
 
     def put_with_payload(self, genome: Any, fitness: float, uuid: int = 0,
                          payload: Any = None) -> int:
         """PUT with opaque side-data (PBT weight snapshots / ckpt paths)."""
         return self._put(PoolEntry(np.asarray(genome), float(fitness),
-                                   int(uuid), self._experiment,
-                                   payload=payload))
+                                   int(uuid), -1, payload=payload))
 
     def get_random_entry(self) -> Optional[PoolEntry]:
         """GET a random entry with metadata/payload (None when empty)."""
@@ -256,15 +261,19 @@ class PoolServer:
 
     # -- logging duties (the server "performs logging duties", §2) ----------
     def _log(self, rec: Dict[str, Any]) -> None:
-        if self._journal is not None:
+        # repro-lint: disable=LCK01 -- _log is only called from verb bodies that hold self._lock
+        journal = self._journal
+        if journal is not None:
+            # repro-lint: disable=RNG02 -- journal timestamps are observability metadata, outside every seeded stream
             rec["t"] = time.time()
-            self._journal.write(json.dumps(rec) + "\n")
-            self._journal.flush()
+            journal.write(json.dumps(rec) + "\n")
+            journal.flush()
 
     def close(self) -> None:
-        if self._journal is not None:
-            self._journal.close()
-            self._journal = None
+        with self._lock:
+            journal, self._journal = self._journal, None
+        if journal is not None:
+            journal.close()
 
 
 class PoolClient:

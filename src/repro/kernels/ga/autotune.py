@@ -98,9 +98,12 @@ def _time_candidate(n: int, L: int, kind: str, tp: int, tl: int,
     cfg = EAConfig(max_pop=n, min_pop=min(8, n))
     spec = _ops.make_spec(cfg, genome)
     rng = jax.random.key(0)
-    pop = (jax.random.bernoulli(rng, 0.5, (n, L)).astype(jnp.int8)
+    # distinct init key: drawing the pop with the same key that seeds the
+    # kernel's counter RNG correlates init genomes with mutation noise
+    k_init = jax.random.fold_in(rng, 1)
+    pop = (jax.random.bernoulli(k_init, 0.5, (n, L)).astype(jnp.int8)
            if kind == "binary"
-           else jax.random.uniform(rng, (n, L), jnp.float32, -5.0, 5.0))
+           else jax.random.uniform(k_init, (n, L), jnp.float32, -5.0, 5.0))
     fit = pop.astype(jnp.float32).sum(-1)
     seed = _ops._seed_words(rng)
     size = _ops._size_vec(n)

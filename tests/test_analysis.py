@@ -1,0 +1,447 @@
+"""repro-lint analyzer tests: one violation fixture + one clean twin per
+pass, suppression round-trips, the CLI exit contract, and two meta-tests
+pinning the committed baseline and the statically-extracted registry
+matrix to the code at head."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.analysis import Baseline, analyze_paths, parse_pragmas  # noqa: E402
+from repro.analysis.engine import collect_python_files  # noqa: E402
+
+
+def lint_source(tmp_path, source, name="mod.py", baseline=None):
+    """Run every pass over one in-memory module; return active findings."""
+    p = tmp_path / name
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(source))
+    return analyze_paths([str(tmp_path)], root=str(tmp_path),
+                         baseline=baseline)
+
+
+def active(result):
+    return result["errors"] + result["active"]
+
+
+def rules_at(result):
+    return {(f.rule_id, f.path, f.line) for f in active(result)}
+
+
+# ---------------------------------------------------------------------------
+# RNG01 / RNG02
+# ---------------------------------------------------------------------------
+def test_rng01_double_sink(tmp_path):
+    res = lint_source(tmp_path, """\
+        import jax
+
+        def f(rng):
+            a = jax.random.normal(rng, (4,))
+            b = jax.random.uniform(rng, (4,))
+            return a + b
+        """)
+    assert ("RNG01", "mod.py", 5) in rules_at(res)
+
+
+def test_rng01_clean_split_twin(tmp_path):
+    res = lint_source(tmp_path, """\
+        import jax
+
+        def f(rng):
+            k_a, k_b = jax.random.split(rng)
+            a = jax.random.normal(k_a, (4,))
+            b = jax.random.uniform(k_b, (4,))
+            return a + b
+        """)
+    assert not active(res)
+
+
+def test_rng01_fold_in_is_derivation_not_sink(tmp_path):
+    # the repo's decorrelation idiom: fold distinct constants off one key
+    res = lint_source(tmp_path, """\
+        import jax
+
+        def f(rng, axis):
+            k_put = jax.random.fold_in(rng, 0xACC)
+            rng = jax.random.fold_in(rng, axis)
+            a = jax.random.normal(k_put, (4,))
+            b = jax.random.normal(rng, (4,))
+            return a + b
+        """)
+    assert not active(res)
+
+
+def test_rng01_exclusive_branches_ok(tmp_path):
+    res = lint_source(tmp_path, """\
+        import jax
+
+        def f(rng, kind):
+            if kind == "binary":
+                return jax.random.bernoulli(rng, 0.5, (4,))
+            return jax.random.uniform(rng, (4,))
+
+        def g(rng, kind):
+            pop = (jax.random.bernoulli(rng, 0.5, (4,)) if kind == "b"
+                   else jax.random.uniform(rng, (4,)))
+            return pop
+        """)
+    assert not active(res)
+
+
+def test_rng01_loop_reuse_vs_carry(tmp_path):
+    res = lint_source(tmp_path, """\
+        import jax
+
+        def bad(rng):
+            out = []
+            for _ in range(3):
+                out.append(jax.random.normal(rng, (2,)))
+            return out
+
+        def carry(rng):
+            out = []
+            for _ in range(3):
+                rng, k = jax.random.split(rng)
+                out.append(jax.random.normal(k, (2,)))
+            return out
+        """)
+    hits = rules_at(res)
+    assert ("RNG01", "mod.py", 6) in hits
+    assert all(line < 8 for _, _, line in hits), hits
+
+
+def test_rng01_non_key_names_untracked(tmp_path):
+    # key-sounding names bound to non-key values must not be tracked
+    res = lint_source(tmp_path, """\
+        def f(problem, static_key, cache, positions):
+            key = (id(problem), static_key)
+            cache.get(key)
+            cache.move_to_end(key)
+            k_pos = positions
+            use(k_pos)
+            use2(k_pos)
+        """)
+    assert not active(res)
+
+
+def test_rng02_wall_clock_only_in_seeded_roots(tmp_path):
+    src = """\
+        import time
+
+        def stamp():
+            return time.time()
+        """
+    res = lint_source(tmp_path / "a", src, name="core/clockmod.py")
+    assert ("RNG02", "core/clockmod.py", 4) in rules_at(res)
+    res2 = lint_source(tmp_path / "b", src, name="tools/clockmod.py")
+    assert not active(res2)
+
+
+def test_rng02_handed_off_callable_and_global_random(tmp_path):
+    res = lint_source(tmp_path, """\
+        import time
+        import random
+
+        def entry(field):
+            return field(default_factory=time.time)
+
+        def draw():
+            return random.random()
+
+        def seeded_ok():
+            return random.Random(7).random()
+        """, name="kernels/srcmod.py")
+    hits = {r for r, _, _ in rules_at(res)}
+    lines = {line for _, _, line in rules_at(res)}
+    assert hits == {"RNG02"} and {5, 8} <= lines and 11 not in lines
+
+
+# ---------------------------------------------------------------------------
+# LCK01
+# ---------------------------------------------------------------------------
+LOCK_BAD = """\
+    import threading
+
+    class Server:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._up = True
+
+        def kill(self):
+            with self._lock:
+                self._up = False
+
+        def is_up(self):
+            return self._up
+    """
+
+
+def test_lck01_unlocked_read_of_locked_state(tmp_path):
+    res = lint_source(tmp_path, LOCK_BAD)
+    assert ("LCK01", "mod.py", 13) in rules_at(res)
+
+
+def test_lck01_clean_twin_and_nested_worker(tmp_path):
+    res = lint_source(tmp_path, """\
+        import threading
+
+        class Server:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._up = True
+                self.meta = 0
+
+            def kill(self):
+                with self._lock:
+                    self._up = False
+
+            def is_up(self):
+                with self._lock:
+                    return self._up
+
+            def spawn(self):
+                def worker():
+                    while self._up:
+                        pass
+                return worker
+        """)
+    hits = rules_at(res)
+    # the nested worker closure reads _up unlocked on its own thread
+    assert hits == {("LCK01", "mod.py", 19)}
+
+
+# ---------------------------------------------------------------------------
+# PAL01 / JIT01
+# ---------------------------------------------------------------------------
+def test_pal01_impure_kernel_body(tmp_path):
+    res = lint_source(tmp_path, """\
+        import numpy as np
+        from jax.experimental import pallas as pl
+
+        def kernel(x_ref, o_ref):
+            print("trace")
+            o_ref[...] = np.tanh(x_ref[...])
+
+        def launch(x):
+            return pl.pallas_call(kernel, out_shape=x)(x)
+        """)
+    hits = rules_at(res)
+    assert ("PAL01", "mod.py", 5) in hits
+    assert ("PAL01", "mod.py", 6) in hits
+
+
+def test_jit01_reaches_through_partial_and_debug_ok(tmp_path):
+    res = lint_source(tmp_path, """\
+        import time
+        from functools import partial
+        import jax
+
+        def step(x, n):
+            jax.debug.print("x={}", x)
+            time.sleep(0.1)
+            return x * n
+
+        def driver(x):
+            f = jax.jit(partial(step, n=2))
+            return f(x)
+        """)
+    assert rules_at(res) == {("JIT01", "mod.py", 7)}
+
+
+def test_purity_clean_twin(tmp_path):
+    res = lint_source(tmp_path, """\
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def kernel(x_ref, o_ref):
+            o_ref[...] = jnp.tanh(x_ref[...])
+
+        def launch(x):
+            return pl.pallas_call(kernel, out_shape=x)(x)
+        """)
+    assert not active(res)
+
+
+# ---------------------------------------------------------------------------
+# REG01 / REG02 / REG03 / DON01
+# ---------------------------------------------------------------------------
+def test_reg01_bad_kernel_arity_and_reg02_hole(tmp_path):
+    res = lint_source(tmp_path, """\
+        from repro.kernels.ga.registry import register_kernel
+
+        @register_kernel("generation", "binary", "ref")
+        def gen_binary(rng, pop, fitness, pop_size, cfg, genome):
+            return pop
+
+        @register_kernel("generation", "float", "ref")
+        def gen_float(rng, pop, fitness):
+            return pop
+
+        @register_kernel("generation", "binary", "lonely")
+        def gen_lonely(rng, pop, fitness, pop_size, cfg, genome):
+            return pop
+        """)
+    hits = rules_at(res)
+    assert ("REG01", "mod.py", 7) in hits          # 3 params, wants 6
+    assert ("REG02", "mod.py", 11) in hits         # 'lonely' misses float
+    assert ("REG01", "mod.py", 3) not in hits
+
+
+def test_reg03_bare_insert_site(tmp_path):
+    res = lint_source(tmp_path, """\
+        from repro.core.pool import pool_insert_host
+
+        def absorb(pool, gs, fs, policy):
+            pool = pool_insert_host(pool, gs, fs)
+            return pool_insert_host(pool, gs, fs, acc=policy)
+        """)
+    assert rules_at(res) == {("REG03", "mod.py", 4)}
+
+
+def test_don01_use_after_donation(tmp_path):
+    res = lint_source(tmp_path, """\
+        import jax
+        from functools import partial
+
+        def driver(step_fn, state, xs):
+            run = jax.jit(partial(step_fn), donate_argnums=(0,))
+            out = run(state, xs)
+            return state.mean() + out
+
+        def carry_ok(step_fn, state, xs):
+            run = jax.jit(step_fn, donate_argnums=(0,))
+            for _ in range(3):
+                state = run(state, xs)
+            return state
+        """)
+    assert rules_at(res) == {("DON01", "mod.py", 7)}
+
+
+# ---------------------------------------------------------------------------
+# suppression round-trips + CLI contract
+# ---------------------------------------------------------------------------
+def test_pragma_requires_reason_and_suppresses(tmp_path):
+    sup, bad = parse_pragmas(
+        ["x = 1  # repro-lint: disable=LCK01 -- helper called under lock",
+         "y = 2  # repro-lint: disable=RNG01"], "m.py")
+    assert sup == {1: {"LCK01"}}
+    assert [f.rule_id for f in bad] == ["LNT01"]
+
+    res = lint_source(tmp_path, LOCK_BAD.replace(
+        "return self._up",
+        "return self._up  # repro-lint: disable=LCK01 -- test fixture"))
+    assert not active(res)
+    assert [f.rule_id for f in res["suppressed"]] == ["LCK01"]
+
+
+def test_baseline_round_trip_one_shot_and_stale(tmp_path):
+    entry = {"rule": "LCK01", "path": "mod.py", "line": 13,
+             "snippet": "return self._up",
+             "justification": "test fixture"}
+    bl = Baseline([dict(entry)])
+    res = lint_source(tmp_path, LOCK_BAD, baseline=bl)
+    assert not active(res) and not bl.unused()
+
+    # one-shot: a second identical violation is NOT covered
+    twice = LOCK_BAD + textwrap.dedent("""\
+
+        def also_up(self):
+            return self._up
+        """).replace("def also_up", "    def also_up").replace(
+        "        return", "            return")
+    bl2 = Baseline([dict(entry)])
+    res2 = lint_source(tmp_path, twice, baseline=bl2)
+    assert len(active(res2)) == 1
+
+    # snippet drift -> entry goes stale and the finding is active again
+    bl3 = Baseline([dict(entry, snippet="return self._up and True")])
+    res3 = lint_source(tmp_path, LOCK_BAD, baseline=bl3)
+    assert len(active(res3)) == 1 and len(bl3.unused()) == 1
+
+    with pytest.raises(ValueError):
+        Baseline([dict(entry, justification="  ")])
+
+
+def test_cli_exit_contract(tmp_path):
+    bad = tmp_path / "core" / "badmod.py"
+    bad.parent.mkdir()
+    bad.write_text("import time\n\n\ndef f():\n    return time.time()\n")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+
+    def cli(*args):
+        return subprocess.run(
+            [sys.executable, "-m", "repro.analysis", *args],
+            capture_output=True, text=True, env=env, cwd=str(tmp_path))
+
+    r = cli("--baseline", "none", "core")
+    assert r.returncode == 1 and "RNG02" in r.stdout
+
+    r = cli("--baseline", "none", "--format", "github", "core")
+    assert r.returncode == 1 and "::error file=core/badmod.py" in r.stdout
+
+    bl = tmp_path / "bl.json"
+    bl.write_text(json.dumps({"entries": [
+        {"rule": "RNG02", "path": "core/badmod.py", "line": 5,
+         "snippet": "return time.time()",
+         "justification": "fixture"}]}))
+    r = cli("--baseline", str(bl), "core")
+    assert r.returncode == 0, r.stdout + r.stderr
+
+    r = cli("--selfcheck")
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+# ---------------------------------------------------------------------------
+# meta-tests against the repo at head
+# ---------------------------------------------------------------------------
+def test_repo_is_clean_under_committed_baseline():
+    bl = Baseline.load(os.path.join(REPO, "analysis_baseline.json"))
+    res = analyze_paths([os.path.join(REPO, "src"),
+                         os.path.join(REPO, "benchmarks"),
+                         os.path.join(REPO, "examples")],
+                        root=REPO, baseline=bl)
+    assert not active(res), [f.format() for f in active(res)]
+    assert not bl.unused(), bl.unused()
+
+
+def test_baseline_entries_reference_live_lines():
+    bl = Baseline.load(os.path.join(REPO, "analysis_baseline.json"))
+    for e in bl.entries:
+        src = open(os.path.join(REPO, e["path"])).read().splitlines()
+        assert any(ln.strip() == e["snippet"].strip() for ln in src), \
+            f"baseline snippet vanished from {e['path']}: {e['snippet']!r}"
+        assert 1 <= e["line"] <= len(src)
+        assert e["justification"].strip()
+
+
+def test_static_registry_matrix_matches_runtime():
+    """The statically-extracted (op x kind x impl) matrix and policy list
+    must agree with the imported registries — the analyzer's REG02 view
+    cannot silently drift from what dispatch actually sees."""
+    from repro.analysis.passes.registry import collect_registrations
+    from repro.analysis.symbols import load_project
+    from repro.kernels.ga import ops as _ops  # noqa: F401 — fills registry
+    from repro.kernels.ga.registry import registered_kernels
+    from repro.core import acceptance as acc_lib
+    from repro.core import migration as mig_lib
+
+    files = collect_python_files([os.path.join(REPO, "src")], root=REPO)
+    project = load_project(files)
+    regs = collect_registrations(project)
+
+    static_kernels = {r.key for r in regs if r.family == "kernel"}
+    assert static_kernels == set(registered_kernels())
+
+    static_topos = {r.key[0] for r in regs if r.family == "topology"}
+    assert static_topos == set(mig_lib.TOPOLOGIES)
+
+    static_policies = {r.key[0] for r in regs if r.family == "acceptance"}
+    assert static_policies == set(acc_lib.ACCEPTANCE_POLICIES)
+    assert static_policies <= set(acc_lib.HOST_MIRRORED)
