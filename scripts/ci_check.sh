@@ -85,6 +85,9 @@ for problem, cx in ((make_trap(n_traps=8, l=4), "two_point"),
           "parity OK")
 PY
 
+echo "== kill -9 + resume smoke (segmented drivers + journaled PoolServer) =="
+python scripts/kill_resume_smoke.py
+
 echo "== Fig 4 smoke (tiled generation engine end-to-end) =="
 python -m benchmarks.fig4_f15 --smoke
 

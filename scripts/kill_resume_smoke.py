@@ -1,0 +1,173 @@
+#!/usr/bin/env python
+"""Kill -9 + resume smoke: the durability contract, end to end.
+
+Three legs, all against real processes (not in-process simulations):
+
+1. **Driver kill/resume.** Launch ``repro.launch.evolve ea --fused`` with
+   ``--snapshot-every``, SIGKILL it once the first snapshot lands, rerun
+   with ``--resume``, and assert the final ``best``/``epochs`` line equals
+   an uninterrupted run of the same seed. (If the victim wins the race and
+   finishes before the kill, the resume leg still runs — resuming a
+   completed run is a no-op that must reproduce the same final state.)
+2. **Journaled PoolServer kill/restart.** SIGKILL a subprocess that is
+   streaming PUTs into a journaled server (so the journal has a real torn
+   tail), rehydrate with ``resume=True``, and assert exactly-once
+   ``get_since`` semantics across a *second* restart: no seq delivered
+   twice to the same cursor_id, and dropped + delivered accounts for every
+   seq the cursor passed.
+3. **Elastic resume.** Resume leg 1's checkpoint at double the island
+   count and assert the run completes.
+
+Run from the repo root:  python scripts/kill_resume_smoke.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = {**os.environ, "PYTHONPATH": os.path.join(ROOT, "src"),
+       "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
+
+EA_ARGS = ["--problem", "trap", "--islands", "4", "--epochs", "12",
+           "--fused", "--seed", "7", "--max-pop", "32", "--min-pop", "32",
+           "--gens-per-epoch", "4"]
+
+
+def evolve_cmd(*extra: str) -> list:
+    return [sys.executable, "-m", "repro.launch.evolve", "ea",
+            *EA_ARGS, *extra]
+
+
+def final_line(out: str) -> str:
+    m = re.search(r"^final (best=.*)$", out, re.M)
+    if not m:
+        raise SystemExit(f"no final-state line in output:\n{out}")
+    return m.group(1)
+
+
+def run(cmd, **kw) -> str:
+    r = subprocess.run(cmd, env=ENV, cwd=ROOT, capture_output=True,
+                       text=True, timeout=600, **kw)
+    if r.returncode != 0:
+        raise SystemExit(f"{' '.join(cmd)} failed:\n{r.stdout}\n{r.stderr}")
+    return r.stdout
+
+
+def wait_for_snapshot(snap_dir: str, proc, timeout: float = 300.0) -> bool:
+    """True once a published step dir exists; False if the victim finished
+    first (won the race) — both are valid smoke states."""
+    t0 = time.time()
+    while time.time() - t0 < timeout:
+        if any(re.fullmatch(r"step_\d+", n)
+               for n in (os.listdir(snap_dir) if os.path.isdir(snap_dir)
+                         else [])):
+            return True
+        if proc.poll() is not None:
+            return False
+        time.sleep(0.05)
+    raise SystemExit("timed out waiting for first snapshot")
+
+
+def leg1_driver_kill_resume(snap_dir: str) -> None:
+    reference = final_line(run(evolve_cmd()))
+    victim = subprocess.Popen(
+        evolve_cmd("--snapshot-every", "2", "--snapshot-dir", snap_dir),
+        env=ENV, cwd=ROOT, stdout=subprocess.DEVNULL,
+        stderr=subprocess.DEVNULL)
+    if wait_for_snapshot(snap_dir, victim):
+        victim.send_signal(signal.SIGKILL)
+        print("leg1: victim SIGKILLed after first snapshot")
+    else:
+        print("leg1: victim finished before kill — resume is a no-op replay")
+    victim.wait()
+    resumed = final_line(run(evolve_cmd(
+        "--snapshot-every", "2", "--snapshot-dir", snap_dir, "--resume")))
+    assert resumed == reference, (
+        f"resume diverged:\n  uninterrupted: {reference}\n"
+        f"  resumed:       {resumed}")
+    print(f"leg1 OK: {resumed}")
+
+
+PUT_STREAMER = r"""
+import os, sys, time
+import numpy as np
+sys.path.insert(0, os.path.join({root!r}, "src"))
+from repro.core import PoolServer
+s = PoolServer(capacity=16, journal_path={journal!r}, resume=True)
+i = 0
+while True:
+    s.put(np.full(8, i % 127, np.int8), float(i), uuid=i % 5)
+    i += 1
+    time.sleep(0.002)
+"""
+
+
+def leg2_server_kill_restart(journal: str) -> None:
+    streamer = subprocess.Popen(
+        [sys.executable, "-c",
+         PUT_STREAMER.format(root=ROOT, journal=journal)],
+        env=ENV, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+    t0 = time.time()
+    while time.time() - t0 < 120:
+        if os.path.exists(journal) and sum(1 for _ in open(journal)) >= 50:
+            break
+        if streamer.poll() is not None:
+            raise SystemExit("put streamer died before writing 50 records")
+        time.sleep(0.05)
+    streamer.send_signal(signal.SIGKILL)
+    streamer.wait()
+    print("leg2: streamer SIGKILLed mid-PUT")
+
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    import numpy as np
+    from repro.core import PoolServer
+
+    s1 = PoolServer(capacity=16, journal_path=journal, resume=True)
+    st = s1.stats()
+    assert st["size"] == 16 and st["puts"] >= 50, st
+    got1, cur1, drop1 = s1.get_since(-1, limit=1000, cursor_id="smoke")
+    seqs1 = [e.seq for e in got1]
+    assert len(set(seqs1)) == len(seqs1), "duplicate seqs in one drain"
+    assert len(seqs1) + drop1 == cur1 + 1, "dropped accounting is off"
+    for i in range(5):
+        s1.put(np.zeros(8, np.int8), 1000.0 + i, uuid=99)
+    s1.close()
+
+    # second restart: the named cursor must survive the journal replay —
+    # a consumer that lost its own position (seq=-1) still never sees an
+    # entry twice
+    s2 = PoolServer(capacity=16, journal_path=journal, resume=True)
+    got2, cur2, drop2 = s2.get_since(-1, limit=1000, cursor_id="smoke")
+    seqs2 = [e.seq for e in got2]
+    dup = set(seqs1) & set(seqs2)
+    assert not dup, f"exactly-once violated across restart: {sorted(dup)}"
+    assert len(seqs2) == 5 and drop2 == 0, (seqs2, drop2)
+    assert cur2 + 1 == len(seqs1) + len(seqs2) + drop1 + drop2, \
+        "cursor arithmetic leaks seqs across restart"
+    print(f"leg2 OK: drain1={len(seqs1)} dropped1={drop1} "
+          f"drain2={len(seqs2)} (no duplicates across restart)")
+
+
+def leg3_elastic_resume(snap_dir: str) -> None:
+    out = final_line(run(evolve_cmd(
+        "--snapshot-dir", snap_dir, "--resume", "--islands", "8")))
+    print(f"leg3 OK (4-island checkpoint resumed as 8): {out}")
+
+
+def main() -> None:
+    with tempfile.TemporaryDirectory() as tmp:
+        snap_dir = os.path.join(tmp, "snaps")
+        leg1_driver_kill_resume(snap_dir)
+        leg2_server_kill_restart(os.path.join(tmp, "pool.jsonl"))
+        leg3_elastic_resume(snap_dir)
+    print("kill_resume_smoke: all legs passed")
+
+
+if __name__ == "__main__":
+    main()

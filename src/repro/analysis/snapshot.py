@@ -1,0 +1,107 @@
+"""Static ExperimentState snapshot-coverage extraction.
+
+The durability contract (docs/durability.md) is that a device->host
+snapshot of one ``ExperimentState`` pytree is *sufficient* to resume any
+fused driver bit-for-bit. That only holds while every value the drivers
+thread through their ``lax.scan`` carry has a home in ``ExperimentState``
+— a new carry element added to a driver without a matching state field
+would silently escape checkpointing and break kill -9 resume.
+
+This module pins the correspondence lexically (no imports executed):
+
+* :func:`scan_carry_names` reads the ``<names> = carry`` unpack inside
+  each segment scan (``fused_scan`` / ``fused_scan_async``) — the
+  authoritative list of what the device loop actually carries;
+* :func:`experiment_state_fields` reads the ``ExperimentState`` NamedTuple
+  definition in ``core/types.py``;
+* :func:`check_coverage` confirms every carried name maps onto a state
+  field and that the leftover fields are exactly the documented
+  host-managed set.
+
+tests/test_durability.py runs this as a meta-test, the same pattern as
+the registry-matrix pin in tests/test_analysis.py.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List
+
+from .symbols import Project
+
+# The segment scans whose carry must be snapshot-covered, and the local
+# spellings that map onto an ExperimentState field of a different name
+# (the async drivers call the epoch counter a tick).
+SCAN_FUNCTIONS = {
+    "repro.core.evolution": "fused_scan",
+    "repro.core.async_migration": "fused_scan_async",
+}
+CARRY_ALIASES = {"tick": "epoch"}
+# Fields deliberately outside the scan carry, maintained by the host-side
+# segment loop / elastic resize (documented in the ExperimentState
+# docstring). "astate" is host-managed only for the *sync* carry — the
+# async scan carries it.
+HOST_MANAGED = {"stats", "next_uuid"}
+
+
+def scan_carry_names(project: Project) -> Dict[str, List[str]]:
+    """``{scan qualname: [carry element names]}`` extracted from the
+    ``a, b, ... = carry`` unpack in each scan's ``body`` closure."""
+    out: Dict[str, List[str]] = {}
+    for module in project.modules:
+        fn_name = SCAN_FUNCTIONS.get(module.name)
+        if fn_name is None:
+            continue
+        entry = module.functions.get(fn_name)
+        if entry is None:
+            continue
+        for node in ast.walk(entry.node):
+            if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+                continue
+            target, value = node.targets[0], node.value
+            if (isinstance(value, ast.Name) and value.id == "carry"
+                    and isinstance(target, ast.Tuple)
+                    and all(isinstance(e, ast.Name) for e in target.elts)):
+                out[f"{module.name}.{fn_name}"] = [e.id for e in target.elts]
+                break
+    return out
+
+
+def experiment_state_fields(project: Project) -> List[str]:
+    """Field names of the ``ExperimentState`` NamedTuple, in order."""
+    for module in project.modules:
+        if module.name != "repro.core.types":
+            continue
+        cls = module.classes.get("ExperimentState")
+        if cls is None:
+            break
+        return [stmt.target.id for stmt in cls.body
+                if isinstance(stmt, ast.AnnAssign)
+                and isinstance(stmt.target, ast.Name)]
+    return []
+
+
+def check_coverage(project: Project) -> List[str]:
+    """Problems with the carry<->state correspondence (empty = covered)."""
+    problems: List[str] = []
+    fields = experiment_state_fields(project)
+    if not fields:
+        return ["ExperimentState not found in repro.core.types"]
+    carries = scan_carry_names(project)
+    for module, fn in SCAN_FUNCTIONS.items():
+        if f"{module}.{fn}" not in carries:
+            problems.append(f"no carry unpack found in {module}.{fn}")
+    covered = set()
+    for qualname, names in carries.items():
+        for name in names:
+            field = CARRY_ALIASES.get(name, name)
+            if field not in fields:
+                problems.append(
+                    f"{qualname} carries {name!r} with no ExperimentState "
+                    f"field {field!r} — it would escape snapshots")
+            covered.add(field)
+    for field in fields:
+        if field not in covered and field not in HOST_MANAGED:
+            problems.append(
+                f"ExperimentState.{field} is neither scan-carried nor in "
+                f"the documented host-managed set {sorted(HOST_MANAGED)}")
+    return problems

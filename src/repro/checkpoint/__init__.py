@@ -1,3 +1,4 @@
-from .checkpointer import Checkpointer, latest_step, restore, save
+from .checkpointer import (Checkpointer, latest_step, restore, save,
+                           sweep_tmp)
 
-__all__ = ["Checkpointer", "save", "restore", "latest_step"]
+__all__ = ["Checkpointer", "save", "restore", "latest_step", "sweep_tmp"]

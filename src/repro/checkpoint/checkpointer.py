@@ -106,8 +106,25 @@ def _gc(directory: str, keep: int) -> None:
 
 
 def latest_step(directory: str) -> Optional[int]:
+    """Newest published step. Unpublished ``step_*.tmp`` build dirs (a
+    writer killed mid-save) and step dirs missing their manifest are never
+    candidates — only an atomically-renamed complete checkpoint counts."""
     steps = _steps(directory)
     return steps[-1] if steps else None
+
+
+def sweep_tmp(directory: str) -> List[str]:
+    """Remove stale ``step_*.tmp`` build dirs left by a writer that was
+    killed mid-save. Safe only when no writer is live (call it at process
+    start — Checkpointer.__init__ does); returns the removed paths."""
+    removed = []
+    if os.path.isdir(directory):
+        for name in os.listdir(directory):
+            if re.fullmatch(r"step_\d+\.tmp", name):
+                path = os.path.join(directory, name)
+                shutil.rmtree(path, ignore_errors=True)
+                removed.append(path)
+    return removed
 
 
 def restore(directory: str, step: Optional[int] = None,
@@ -174,12 +191,19 @@ class Checkpointer:
         self.keep = keep
         self._pending: List[threading.Thread] = []
         self._errors: List[BaseException] = []
+        # a previous process killed mid-save leaves a step_*.tmp build dir;
+        # no writer of ours can be live yet, so it is safe to sweep here
+        sweep_tmp(directory)
 
     def save_async(self, step: int, tree, meta: Optional[Dict] = None) -> None:
         def snap(x):
             if isinstance(x, jax.Array) and jax.dtypes.issubdtype(
                     x.dtype, jax.dtypes.prng_key):
-                return x          # tiny; handled specially by save()
+                # re-wrap a fresh buffer: the caller may donate the original
+                # into its next step before the background write reads it
+                return jax.random.wrap_key_data(
+                    jnp_asarray(np.asarray(jax.random.key_data(x))),
+                    impl=str(jax.random.key_impl(x)))
             return jax.device_get(x)
 
         host_tree = jax.tree.map(snap, tree)
@@ -190,6 +214,9 @@ class Checkpointer:
             except BaseException as e:  # noqa: BLE001
                 self._errors.append(e)
 
+        # prune completed writers so a long run's thread list stays O(live)
+        # instead of growing until the next wait()
+        self._pending = [p for p in self._pending if p.is_alive()]
         t = threading.Thread(target=work, daemon=True)
         t.start()
         self._pending.append(t)
@@ -199,7 +226,10 @@ class Checkpointer:
             t.join()
         self._pending.clear()
         if self._errors:
-            raise self._errors[0]
+            # drain, don't peek: a raised error is consumed — without this
+            # every later wait() re-raised the same stale failure forever
+            errors, self._errors = self._errors, []
+            raise errors[0]
 
     def restore_latest(self, target=None, shardings=None):
         self.wait()

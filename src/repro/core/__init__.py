@@ -11,8 +11,9 @@ Public API:
     sharded.run_sharded / run_fused_sharded
     async_pool.PoolServer / PoolClient
 """
-from .types import (AcceptanceConfig, EAConfig, ExperimentStats, GenomeSpec,
-                    IslandState, MigrationConfig, PoolState)
+from .types import (AcceptanceConfig, EAConfig, ExperimentState,
+                    ExperimentStats, GenomeSpec, IslandState, MigrationConfig,
+                    PoolState)
 from .problems import (Problem, make_f15, make_onemax, make_problem,
                        make_rastrigin, make_royal_road, make_sphere,
                        make_trap)
@@ -29,7 +30,8 @@ from .migration import (HostBridge, available_topologies, get_topology,
 from .sharded import run_fused_sharded, run_fused_sharded_async, run_sharded
 
 __all__ = [
-    "AcceptanceConfig", "EAConfig", "ExperimentStats", "GenomeSpec",
+    "AcceptanceConfig", "EAConfig", "ExperimentState", "ExperimentStats",
+    "GenomeSpec",
     "IslandState", "MigrationConfig", "PoolState", "Problem", "make_f15",
     "make_onemax", "make_problem", "make_rastrigin", "make_royal_road",
     "make_sphere", "make_trap", "ga", "island", "pool", "acceptance",

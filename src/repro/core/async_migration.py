@@ -67,6 +67,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import acceptance as acceptance_lib
+from . import evolution as evolution_lib
 from . import island as island_lib
 from . import migration as migration_lib
 from . import pool as pool_lib
@@ -74,8 +75,8 @@ from .evolution import (RunResult, bcast_mask, collect_stats, fused_jit,
                         success_mask, unique_buffers)
 from .pool import NEG_INF
 from .problems import Problem
-from .types import (Array, EAConfig, ExperimentStats, IslandState,
-                    MigrationConfig, PoolState)
+from .types import (Array, EAConfig, ExperimentState, ExperimentStats,
+                    IslandState, MigrationConfig, PoolState)
 
 
 # ---------------------------------------------------------------------------
@@ -371,14 +372,21 @@ def run_experiment_async(problem: Problem,
 # Fused async driver: the fire mask carried through one lax.scan
 # ---------------------------------------------------------------------------
 def fused_scan_async(islands: IslandState, pool: PoolState,
-                     astate: AsyncState, key: Array, *, problem: Problem,
-                     cfg: EAConfig, mig: MigrationConfig, acfg: AsyncConfig,
+                     astate: AsyncState, key: Array,
+                     tick0: Array | int = 0, stopped0: Array | bool = False,
+                     *, problem: Problem, cfg: EAConfig,
+                     mig: MigrationConfig, acfg: AsyncConfig,
                      w2: bool, max_ticks: int, axis: Optional[str] = None,
                      with_stats: bool = True):
-    """The whole asynchronous experiment as one ``lax.scan`` over ticks —
-    the async mirror of :func:`repro.core.evolution.fused_scan` (same key
-    schedule, same early-stop freeze, same stats stacking), with the
-    per-island clocks/fire-mask/inbox carried through the scan."""
+    """``max_ticks`` ticks of the asynchronous experiment as one
+    ``lax.scan`` — the async mirror of
+    :func:`repro.core.evolution.fused_scan` (same key schedule, same
+    early-stop freeze, same stats stacking), with the per-island
+    clocks/fire-mask/inbox carried through the scan. Like its sync mirror
+    this is a resumable *segment*: the full carry (islands, pool, astate,
+    key, tick, stopped) enters as arguments and leaves as results, so
+    chained segments are bit-for-bit one long scan
+    (:func:`repro.core.evolution.run_segments`)."""
     def _global_success(islands: IslandState) -> Array:
         s = success_mask(islands, problem, cfg).any()
         if axis is not None:
@@ -403,11 +411,16 @@ def fused_scan_async(islands: IslandState, pool: PoolState,
         stats = collect_stats(islands, tick, axis=axis) if with_stats else ()
         return (islands, pool, astate, key, tick, stopped), stats
 
-    stopped0 = jnp.asarray(False) if w2 else _global_success(islands)
-    init = (islands, pool, astate, key, jnp.int32(0), stopped0)
-    (islands, pool, astate, _, ticks, _), stats = jax.lax.scan(
+    stopped0 = jnp.asarray(stopped0)
+    if not w2:
+        # idempotent re-latch: fresh runs test the init population, resumed
+        # segments OR with the restored latch (same value either way)
+        stopped0 = stopped0 | _global_success(islands)
+    init = (islands, pool, astate, key, jnp.asarray(tick0, jnp.int32),
+            stopped0)
+    (islands, pool, astate, key, ticks, stopped), stats = jax.lax.scan(
         body, init, None, length=max_ticks)
-    return islands, pool, astate, ticks, stats
+    return islands, pool, astate, key, ticks, stopped, stats
 
 
 def run_fused_async(problem: Problem,
@@ -419,33 +432,72 @@ def run_fused_async(problem: Problem,
                     rng: Optional[Array] = None,
                     w2: bool = False,
                     return_stats: bool = False,
-                    return_astate: bool = False):
-    """Asynchronous :func:`repro.core.evolution.run_fused`: one jitted
-    ``lax.scan`` with donated island/pool/async buffers. In the degenerate
-    ``acfg`` the result is bit-for-bit :func:`run_fused`'s."""
+                    return_astate: bool = False,
+                    snapshot_every: Optional[int] = None,
+                    snapshot_dir: Optional[str] = None,
+                    snapshot_keep: int = 3,
+                    checkpointer=None,
+                    resume: bool = False):
+    """Asynchronous :func:`repro.core.evolution.run_fused`: jitted
+    ``lax.scan`` segments with donated island/pool/async buffers. In the
+    degenerate ``acfg`` the result is bit-for-bit :func:`run_fused`'s.
+    Durability kwargs behave exactly as in :func:`run_fused` — the
+    snapshot additionally carries the :class:`AsyncState` (clocks, churn
+    windows, inbox), and an elastic resume gives grown islands
+    churn-rejoin async rows (fresh clock, never-churn window)."""
     rng = jax.random.key(0) if rng is None else rng
     k_init, k_loop = jax.random.split(rng)
-    islands0 = island_lib.init_islands(k_init, n_islands, problem, cfg)
-    pool0 = pool_lib.pool_init(mig.pool_capacity, problem.genome)
-    astate0 = init_async_state(jax.random.fold_in(k_init, 7), n_islands,
-                               acfg, max_ticks, problem.genome)
+    ckpt = evolution_lib.resolve_checkpointer(snapshot_dir, checkpointer,
+                                              snapshot_keep)
 
-    run = fused_jit(
-        problem,
-        ("async", cfg, mig, acfg, w2, max_ticks, return_stats),
-        lambda: jax.jit(partial(fused_scan_async, problem=problem, cfg=cfg,
-                                mig=mig, acfg=acfg, w2=w2,
-                                max_ticks=max_ticks,
-                                with_stats=return_stats),
-                        donate_argnums=(0, 1, 2)))
-    islands0, pool0, astate0 = unique_buffers((islands0, pool0, astate0))
-    islands, pool, astate, ticks, stats = run(islands0, pool0, astate0,
-                                              k_loop)
-    out = (islands, pool, ticks)
+    def fresh_state(n: int) -> ExperimentState:
+        islands0 = island_lib.init_islands(k_init, n, problem, cfg)
+        pool0 = pool_lib.pool_init(mig.pool_capacity, problem.genome)
+        astate0 = init_async_state(jax.random.fold_in(k_init, 7), n,
+                                   acfg, max_ticks, problem.genome)
+        return ExperimentState(
+            islands=islands0, pool=pool0, astate=astate0, key=k_loop,
+            epoch=jnp.int32(0), stopped=jnp.asarray(False),
+            stats=evolution_lib.empty_stats() if return_stats else (),
+            next_uuid=jnp.int32(n))
+
+    state = None
+    if resume:
+        if ckpt is None:
+            raise ValueError("resume=True needs snapshot_dir or checkpointer")
+        state = evolution_lib.restore_experiment_state(
+            ckpt, fresh_state(n_islands))
+        if int(state.islands.pop.shape[0]) != n_islands:
+            from repro.runtime import elastic as elastic_lib  # deferred: avoid cycle
+            state = elastic_lib.resize_experiment(state, n_islands, problem,
+                                                  cfg)
+    if state is None:
+        state = fresh_state(n_islands)
+
+    def segment_fn(state: ExperimentState, seg_len: int):
+        run = fused_jit(
+            problem,
+            ("async", cfg, mig, acfg, w2, seg_len, return_stats),
+            lambda: jax.jit(partial(fused_scan_async, problem=problem,
+                                    cfg=cfg, mig=mig, acfg=acfg, w2=w2,
+                                    max_ticks=seg_len,
+                                    with_stats=return_stats),
+                            donate_argnums=(0, 1, 2)))
+        islands, pool, astate = unique_buffers(
+            (state.islands, state.pool, state.astate))
+        islands, pool, astate, key, tick, stopped, seg_stats = run(
+            islands, pool, astate, state.key, state.epoch, state.stopped)
+        return state._replace(islands=islands, pool=pool, astate=astate,
+                              key=key, epoch=tick, stopped=stopped), seg_stats
+
+    state = evolution_lib.run_segments(
+        state, max_ticks, segment_fn, snapshot_every=snapshot_every,
+        checkpointer=ckpt, w2=w2, return_stats=return_stats)
+    out = (state.islands, state.pool, state.epoch)
     if return_stats:
-        out += (stats,)
+        out += (state.stats,)
     if return_astate:
-        out += (astate,)
+        out += (state.astate,)
     return out
 
 
@@ -472,18 +524,26 @@ class AsyncHostBridge(migration_lib.HostBridge):
     (surfaced by :meth:`stats`) — overflow demotes exactly-once to
     *detected* at-most-once instead of silent loss.
 
+    ``cursor_id`` names a server-side cursor
+    (:meth:`~repro.core.async_pool.PoolServer.get_since`): with it set, the
+    drain position survives the death of *either* end — a restarted bridge
+    resumes from the server's stored cursor instead of re-reading the whole
+    pool, and a journal-rehydrated server restores the stored cursor on
+    replay, so exactly-once holds across both restarts.
+
     :meth:`flush` blocks until the worker has drained the job queue —
     tests and orderly shutdown only; the driver never needs it.
     """
 
     def __init__(self, server, pull: int = 4, uuid: int = -1,
-                 acceptance=None):
+                 acceptance=None, cursor_id: Optional[str] = None):
         super().__init__(server, every=1, pull=pull, uuid=uuid,
                          acceptance=acceptance)
         self._jobs: "queue.Queue" = queue.Queue()
         self._fetched: List[Tuple[np.ndarray, float]] = []
         self._flock = threading.Lock()
         self._last_seq = -1
+        self._cursor_id = cursor_id
         self._absorbs = 0
         self.dropped = 0
         self._stop = threading.Event()
@@ -509,7 +569,7 @@ class AsyncHostBridge(migration_lib.HostBridge):
                 with self._flock:
                     cursor = self._last_seq
                 entries, cursor, dropped = self.server.get_since(
-                    cursor, limit=self.pull)
+                    cursor, limit=self.pull, cursor_id=self._cursor_id)
                 fresh = [(e.genome.copy(), e.fitness) for e in entries
                          if e.uuid != self.uuid]
                 with self._flock:

@@ -64,7 +64,8 @@ class PoolServer:
 
     def __init__(self, capacity: int = 1024, journal_path: Optional[str] = None,
                  seed: int = 0,
-                 acceptance: Optional[AcceptanceConfig] = None):
+                 acceptance: Optional[AcceptanceConfig] = None,
+                 resume: bool = False):
         self._lock = threading.Lock()
         self._capacity = capacity
         # deque(maxlen): O(1) ring eviction on the PUT hot path (a plain
@@ -87,8 +88,13 @@ class PoolServer:
         self._n_gets = 0
         self._seq = 0
         self._best: Optional[PoolEntry] = None
+        self._cursors: Dict[str, int] = {}   # named get_since positions
         self._journal_path = journal_path
-        self._journal = open(journal_path, "a") if journal_path else None
+        self._journal = None
+        if journal_path:
+            if resume and os.path.exists(journal_path):
+                self._replay(journal_path)
+            self._journal = open(journal_path, "a")
 
     # -- failure injection --------------------------------------------------
     def kill(self) -> None:
@@ -154,8 +160,16 @@ class PoolServer:
                 self._entries[decision] = entry
             if self._best is None or entry.fitness > self._best.fitness:
                 self._best = entry
+            # write-ahead record: genome + the *resolved* slot decision, so
+            # replay reconstructs the pool exactly without re-running the
+            # acceptance policy against state that eviction already changed
             self._log({"op": "put", "uuid": entry.uuid,
-                       "fitness": entry.fitness, "exp": self._experiment})
+                       "fitness": entry.fitness, "exp": self._experiment,
+                       "seq": entry.seq,
+                       "slot": ("a" if decision is acceptance_lib.APPEND
+                                else int(decision)),
+                       "genome": entry.genome.tolist(),
+                       "dtype": str(entry.genome.dtype)})
             return self._experiment
 
     def put(self, genome: Any, fitness: float, uuid: int = 0) -> int:
@@ -192,6 +206,7 @@ class PoolServer:
             return e.genome.copy(), e.fitness
 
     def get_since(self, seq: int, limit: int = 64,
+                  cursor_id: Optional[str] = None,
                   ) -> Tuple[List[PoolEntry], int, int]:
         """GET every resident entry with ``entry.seq > seq``, lowest seq
         first, capped at ``limit``. Returns ``(entries, cursor, dropped)``:
@@ -200,6 +215,14 @@ class PoolServer:
         async host bridge: advancing the cursor guarantees no entry is ever
         served twice to the same consumer, without the server tracking
         consumers.
+
+        ``cursor_id`` names a *server-side* cursor: the effective start is
+        ``max(seq, stored position)`` and the advanced cursor is stored
+        (and journaled) under the name. A consumer that loses its own
+        cursor — a bridge restarted after a crash — resumes with
+        ``seq=-1`` and the same ``cursor_id`` and still never sees an
+        entry twice, even across a server restart (replay restores the
+        stored positions).
 
         ``dropped`` counts the seqs in ``(seq, cursor]`` that are no longer
         resident — retired before this consumer ever saw them, whether
@@ -212,6 +235,8 @@ class PoolServer:
         with self._lock:
             self._check_up()
             self._n_gets += 1
+            if cursor_id is not None:
+                seq = max(int(seq), self._cursors.get(cursor_id, -1))
             fresh = sorted((e for e in self._entries if e.seq > seq),
                            key=lambda e: e.seq)[:limit]
             if fresh:
@@ -224,9 +249,12 @@ class PoolServer:
                 # is gone — cover them all so the gap is charged once
                 cursor = max(seq, self._seq - 1)
                 dropped = cursor - seq
+            if cursor_id is not None:
+                self._cursors[cursor_id] = cursor
             if fresh or dropped:
                 self._log({"op": "get_since", "n": len(fresh),
-                           "cursor": cursor, "dropped": dropped})
+                           "cursor": cursor, "dropped": dropped,
+                           "cursor_id": cursor_id})
             return fresh, cursor, dropped
 
     def get_best(self) -> Tuple[np.ndarray, float]:
@@ -258,6 +286,79 @@ class PoolServer:
                 "gets": self._n_gets,
                 "best_fitness": None if self._best is None else self._best.fitness,
             }
+
+    # -- write-ahead log replay (server restart survives, §2 durability) ----
+    def _replay(self, path: str) -> None:
+        """Rehydrate pool contents, seq counter, named cursors, experiment
+        number and acceptance stats from an existing journal — the journal
+        is a write-ahead log: every mutation was recorded *with its resolved
+        effect* (genome + slot for puts), so replay is exact without
+        re-running acceptance policies against long-evicted state. A torn
+        final line (writer killed mid-append) ends the replay cleanly —
+        everything before it is intact — and is *truncated away* before the
+        journal reopens for append: a torn tail carries no newline, so a
+        record appended after it would fuse into one corrupt line and lose
+        both on the next replay."""
+        good_end = 0
+        with open(path, "rb") as f:
+            for raw in f:
+                line = raw.strip()
+                if line:
+                    try:
+                        rec = json.loads(line)
+                    except json.JSONDecodeError:
+                        break    # torn tail from a kill mid-write
+                    self._apply(rec)
+                good_end += len(raw)
+        if good_end < os.path.getsize(path):
+            with open(path, "r+b") as f:
+                f.truncate(good_end)
+        if good_end > 0:
+            # a record whose *newline* was lost to the kill is complete
+            # (it replayed) but unterminated — re-terminate it so the
+            # next append starts a fresh line
+            with open(path, "r+b") as f:
+                f.seek(good_end - 1)
+                if f.read(1) != b"\n":
+                    f.write(b"\n")
+
+    def _apply(self, rec: Dict[str, Any]) -> None:
+        with self._lock:
+            op = rec.get("op")
+            if op == "put" and "genome" in rec:
+                entry = PoolEntry(
+                    np.asarray(rec["genome"], dtype=np.dtype(rec["dtype"])),
+                    float(rec["fitness"]), int(rec["uuid"]), int(rec["exp"]),
+                    timestamp=rec.get("t", 0.0))
+                entry.seq = int(rec["seq"])
+                self._n_puts += 1
+                slot = rec.get("slot", "a")
+                if slot == "a":
+                    self._entries.append(entry)
+                else:
+                    self._entries[int(slot)] = entry
+                if self._best is None or entry.fitness > self._best.fitness:
+                    self._best = entry
+                self._seq = max(self._seq, entry.seq + 1)
+            elif op == "put":    # pre-WAL journal: count, can't reconstruct
+                self._n_puts += 1
+            elif op == "put_rejected":
+                self._n_puts += 1
+                self._n_rejected += 1
+            elif op == "get":
+                self._n_gets += 1
+            elif op == "get_since":
+                self._n_gets += 1
+                cursor = int(rec.get("cursor", -1))
+                cid = rec.get("cursor_id")
+                if cid is not None:
+                    self._cursors[cid] = max(self._cursors.get(cid, -1),
+                                             cursor)
+                self._seq = max(self._seq, cursor + 1)
+            elif op == "reset":
+                self._entries.clear()
+                self._best = None
+                self._experiment = int(rec.get("exp", self._experiment + 1))
 
     # -- logging duties (the server "performs logging duties", §2) ----------
     def _log(self, rec: Dict[str, Any]) -> None:

@@ -41,8 +41,8 @@ from . import island as island_lib
 from . import migration as migration_lib
 from . import pool as pool_lib
 from .problems import Problem
-from .types import (Array, EAConfig, ExperimentStats, IslandState,
-                    MigrationConfig, PoolState)
+from .types import (Array, EAConfig, ExperimentState, ExperimentStats,
+                    IslandState, MigrationConfig, PoolState)
 
 
 # ---------------------------------------------------------------------------
@@ -220,17 +220,23 @@ def _host_pool_exchange(host_pool, islands: IslandState) -> None:
 # ---------------------------------------------------------------------------
 # Fully fused driver (lax.scan — benchmark configuration)
 # ---------------------------------------------------------------------------
-def fused_scan(islands: IslandState, pool: PoolState, key: Array, *,
+def fused_scan(islands: IslandState, pool: PoolState, key: Array,
+               epoch0: Array | int = 0, stopped0: Array | bool = False, *,
                problem: Problem, cfg: EAConfig, mig: MigrationConfig,
                w2: bool, max_epochs: int, axis: Optional[str] = None,
                with_stats: bool = True,
-               ) -> Tuple[IslandState, PoolState, Array, ExperimentStats]:
-    """The whole experiment as one ``lax.scan`` over epochs.
+               ) -> Tuple[IslandState, PoolState, Array, Array, Array,
+                          ExperimentStats]:
+    """``max_epochs`` epochs of the experiment as one ``lax.scan`` — a
+    resumable *segment*: the whole scan carry (islands, pool, key, epoch,
+    stopped) enters as arguments and leaves as results, so chaining
+    segments is bit-for-bit one long scan (the segmented snapshot drivers
+    rely on exactly this identity; see :func:`run_segments`).
 
     Per-epoch :class:`ExperimentStats` are stacked on device (shape
     ``(max_epochs, ...)``) — no host round-trip per epoch. Early success
     (non-W²) freezes the carry via ``lax.cond`` so the remaining iterations
-    are skipped at device speed; ``epochs`` counts the live ones and the
+    are skipped at device speed; ``epoch`` counts the live ones and the
     stats rows after a stop repeat the frozen final state. With ``axis``
     the same body runs inside ``shard_map``: the success test and the stats
     reductions finish with psum/pmax so every shard agrees.
@@ -263,23 +269,38 @@ def fused_scan(islands: IslandState, pool: PoolState, key: Array, *,
         stats = collect_stats(islands, epoch, axis=axis) if with_stats else ()
         return (islands, pool, key, epoch, stopped), stats
 
-    stopped0 = jnp.asarray(False) if w2 else _global_success(islands)
-    init = (islands, pool, key, jnp.int32(0), stopped0)
-    (islands, pool, _, epochs, _), stats = jax.lax.scan(
+    stopped0 = jnp.asarray(stopped0)
+    if not w2:
+        # idempotent re-latch: a fresh run tests the init population, a
+        # resumed segment ORs with the restored latch (same value either way)
+        stopped0 = stopped0 | _global_success(islands)
+    init = (islands, pool, key, jnp.asarray(epoch0, jnp.int32), stopped0)
+    (islands, pool, key, epochs, stopped), stats = jax.lax.scan(
         body, init, None, length=max_epochs)
-    return islands, pool, epochs, stats
+    return islands, pool, key, epochs, stopped, stats
 
 
 def unique_buffers(tree):
-    """Copy any leaf that aliases an earlier leaf (jax caches small scalar
+    """Copy any leaf that aliases an earlier leaf (jax caches small
     constants, e.g. a fresh pool's ptr/count are one buffer) so the whole
-    tree can be donated without `donated twice` errors."""
+    tree can be donated without `donated twice` errors. Keyed on the
+    underlying device buffers, not Python ids — two distinct ``jax.Array``
+    wrappers can share one buffer (e.g. two equal ``arange`` constants
+    after a ``device_put``)."""
     seen = set()
 
+    def key(x):
+        try:
+            return tuple(s.data.unsafe_buffer_pointer()
+                         for s in x.addressable_shards)
+        except Exception:  # noqa: BLE001 — non-Array leaf / exotic backend
+            return id(x)
+
     def f(x):
-        if id(x) in seen:
+        k = key(x)
+        if k in seen:
             return x.copy()
-        seen.add(id(x))
+        seen.add(k)
         return x
 
     return jax.tree.map(f, tree)
@@ -310,6 +331,115 @@ def fused_jit(problem: Problem, static_key: tuple,
     return entry[1]
 
 
+# ---------------------------------------------------------------------------
+# Durable segmented execution: ExperimentState snapshots between sub-scans
+# ---------------------------------------------------------------------------
+def empty_stats() -> ExperimentStats:
+    """Zero-row stacked stats — the ``stats`` field of a fresh
+    :class:`~repro.core.types.ExperimentState` (structure template for
+    checkpoint restore; dtypes match :func:`collect_stats` exactly)."""
+    z32 = np.zeros((0,), np.int32)
+    zf = np.zeros((0,), np.float32)
+    return ExperimentStats(epoch=z32, best_fitness=zf, mean_best=zf,
+                           total_evaluations=z32, n_done=z32,
+                           experiments_solved=z32)
+
+
+def segment_plan(done: int, total: int,
+                 snapshot_every: Optional[int]) -> List[int]:
+    """Split the remaining ``total - done`` epochs into scan-segment
+    lengths: ``snapshot_every``-sized chunks plus a remainder (at most two
+    distinct lengths -> at most two compiles). ``None``/0 = one segment."""
+    if total <= done:
+        return []
+    if not snapshot_every or snapshot_every <= 0:
+        return [total - done]
+    out = []
+    at = done
+    while at < total:
+        n = min(snapshot_every, total - at)
+        out.append(n)
+        at += n
+    return out
+
+
+def _device_part(state: ExperimentState) -> ExperimentState:
+    """jnp-ify the scan-carried fields (a restored checkpoint holds numpy —
+    donation needs device arrays) and leave host-managed fields alone."""
+    dev = jax.tree.map(jnp.asarray,
+                       (state.islands, state.pool, state.astate, state.key,
+                        state.epoch, state.stopped))
+    return state._replace(islands=dev[0], pool=dev[1], astate=dev[2],
+                          key=dev[3], epoch=dev[4], stopped=dev[5])
+
+
+def resolve_checkpointer(snapshot_dir, checkpointer, keep: int = 3):
+    """One Checkpointer per run: an explicit instance wins, else one is
+    built on ``snapshot_dir`` (None -> no snapshotting)."""
+    if checkpointer is not None:
+        return checkpointer
+    if snapshot_dir is None:
+        return None
+    from repro.checkpoint import Checkpointer  # deferred: keep core import-light
+    return Checkpointer(snapshot_dir, keep=keep)
+
+
+def restore_experiment_state(checkpointer, template: ExperimentState,
+                             ) -> ExperimentState:
+    """Load the latest snapshot into ``template``'s structure (leaf shapes
+    come from the manifest, so an elastic resume at a different island
+    count restores fine) and return it jnp-ified for the next segment."""
+    state = checkpointer.restore_latest(target=template)
+    return _device_part(state)
+
+
+def run_segments(state: ExperimentState, max_steps: int, segment_fn, *,
+                 snapshot_every: Optional[int] = None, checkpointer=None,
+                 w2: bool = False, return_stats: bool = False,
+                 ) -> ExperimentState:
+    """The segmented driver loop shared by every fused driver.
+
+    ``segment_fn(state, seg_len) -> (state', seg_stats)`` runs one jitted
+    scan segment of ``seg_len`` epochs on the device part of ``state``.
+    Between segments the *whole* :class:`ExperimentState` is snapshotted
+    device->host (``Checkpointer.save_async`` — serialization happens off
+    the driver thread) so a kill -9 loses at most ``snapshot_every`` epochs
+    and a resume is bit-for-bit the uninterrupted run: chaining scan
+    segments over the carried (islands, pool, key, epoch, stopped) is
+    exactly one long scan.
+
+    Early success breaks out of the remaining segments; the stacked stats
+    are padded with the frozen final row so their shape — (max_steps, ...)
+    — and values match the single-scan driver exactly (a frozen scan
+    iteration emits an identical row).
+    """
+    stats_host = state.stats if isinstance(state.stats,
+                                           ExperimentStats) else None
+    for seg_len in segment_plan(int(np.asarray(state.epoch)), max_steps,
+                                snapshot_every):
+        state, seg_stats = segment_fn(state, seg_len)
+        if return_stats:
+            seg_np = jax.tree.map(np.asarray, seg_stats)
+            stats_host = seg_np if stats_host is None else jax.tree.map(
+                lambda a, b: np.concatenate([a, b]), stats_host, seg_np)
+            state = state._replace(stats=stats_host)
+        if checkpointer is not None:
+            checkpointer.save_async(int(np.asarray(state.epoch)), state)
+        if (not w2) and bool(np.asarray(state.stopped)):
+            break
+    if return_stats and stats_host is not None:
+        rows = int(stats_host.epoch.shape[0])
+        if rows and rows < max_steps:
+            pad = max_steps - rows
+            stats_host = jax.tree.map(
+                lambda a: np.concatenate([a, np.repeat(a[-1:], pad, axis=0)]),
+                stats_host)
+            state = state._replace(stats=stats_host)
+    if checkpointer is not None:
+        checkpointer.wait()   # surface write errors before declaring success
+    return state
+
+
 def run_fused(problem: Problem,
               cfg: EAConfig = EAConfig(),
               mig: MigrationConfig = MigrationConfig(),
@@ -317,24 +447,71 @@ def run_fused(problem: Problem,
               max_epochs: int = 100,
               rng: Optional[Array] = None,
               w2: bool = False,
-              return_stats: bool = False):
-    """Entire experiment in one jitted ``lax.scan`` with donated island/pool
-    buffers. Returns ``(islands, pool, epochs)`` — plus the stacked
-    per-epoch :class:`ExperimentStats` when ``return_stats`` is true. Stops
-    early on global success (non-W²)."""
+              return_stats: bool = False,
+              snapshot_every: Optional[int] = None,
+              snapshot_dir: Optional[str] = None,
+              snapshot_keep: int = 3,
+              checkpointer=None,
+              resume: bool = False):
+    """Entire experiment as jitted ``lax.scan`` segments with donated
+    island/pool buffers. Returns ``(islands, pool, epochs)`` — plus the
+    stacked per-epoch :class:`ExperimentStats` when ``return_stats`` is
+    true. Stops early on global success (non-W²).
+
+    Durability: ``snapshot_every=k`` splits the scan into ``k``-epoch
+    segments and snapshots the full :class:`ExperimentState` to
+    ``snapshot_dir`` after each; ``resume=True`` restores the latest
+    snapshot and continues — bit-for-bit identical to the uninterrupted
+    seeded run. A resume with a different ``n_islands`` triggers elastic
+    resize (``repro.runtime.elastic``): shrink slices islands off, grow
+    seeds fresh islands from the pool under new (never recycled) uuids.
+    """
     rng = jax.random.key(0) if rng is None else rng
     k_init, k_loop = jax.random.split(rng)
-    islands0 = island_lib.init_islands(k_init, n_islands, problem, cfg)
-    pool0 = pool_lib.pool_init(mig.pool_capacity, problem.genome)
+    ckpt = resolve_checkpointer(snapshot_dir, checkpointer, snapshot_keep)
 
-    run = fused_jit(
-        problem, ("batched", cfg, mig, w2, max_epochs, return_stats),
-        lambda: jax.jit(partial(fused_scan, problem=problem, cfg=cfg,
-                                mig=mig, w2=w2, max_epochs=max_epochs,
-                                with_stats=return_stats),
-                        donate_argnums=(0, 1)))
-    islands0, pool0 = unique_buffers((islands0, pool0))
-    islands, pool, epochs, stats = run(islands0, pool0, k_loop)
+    state = None
+    if resume:
+        if ckpt is None:
+            raise ValueError("resume=True needs snapshot_dir or checkpointer")
+        template = ExperimentState(
+            islands=island_lib.init_islands(k_init, n_islands, problem, cfg),
+            pool=pool_lib.pool_init(mig.pool_capacity, problem.genome),
+            # structure-only: restore replaces every leaf, including the key
+            astate=(), key=jax.random.key(0), epoch=jnp.int32(0),
+            stopped=jnp.asarray(False),
+            stats=empty_stats() if return_stats else (),
+            next_uuid=jnp.int32(n_islands))
+        state = restore_experiment_state(ckpt, template)
+        if int(state.islands.pop.shape[0]) != n_islands:
+            from repro.runtime import elastic as elastic_lib  # deferred: avoid cycle
+            state = elastic_lib.resize_experiment(state, n_islands, problem,
+                                                  cfg)
+    if state is None:
+        islands0 = island_lib.init_islands(k_init, n_islands, problem, cfg)
+        pool0 = pool_lib.pool_init(mig.pool_capacity, problem.genome)
+        state = ExperimentState(
+            islands=islands0, pool=pool0, astate=(), key=k_loop,
+            epoch=jnp.int32(0), stopped=jnp.asarray(False),
+            stats=empty_stats() if return_stats else (),
+            next_uuid=jnp.int32(n_islands))
+
+    def segment_fn(state: ExperimentState, seg_len: int):
+        run = fused_jit(
+            problem, ("batched", cfg, mig, w2, seg_len, return_stats),
+            lambda: jax.jit(partial(fused_scan, problem=problem, cfg=cfg,
+                                    mig=mig, w2=w2, max_epochs=seg_len,
+                                    with_stats=return_stats),
+                            donate_argnums=(0, 1)))
+        islands, pool = unique_buffers((state.islands, state.pool))
+        islands, pool, key, epoch, stopped, seg_stats = run(
+            islands, pool, state.key, state.epoch, state.stopped)
+        return state._replace(islands=islands, pool=pool, key=key,
+                              epoch=epoch, stopped=stopped), seg_stats
+
+    state = run_segments(state, max_epochs, segment_fn,
+                         snapshot_every=snapshot_every, checkpointer=ckpt,
+                         w2=w2, return_stats=return_stats)
     if return_stats:
-        return islands, pool, epochs, stats
-    return islands, pool, epochs
+        return state.islands, state.pool, state.epoch, state.stats
+    return state.islands, state.pool, state.epoch

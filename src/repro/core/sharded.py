@@ -52,8 +52,8 @@ from . import migration as migration_lib
 from . import pool as pool_lib
 from .async_migration import AsyncConfig, AsyncState
 from .problems import Problem
-from .types import (Array, EAConfig, ExperimentStats, IslandState,
-                    MigrationConfig, PoolState)
+from .types import (Array, EAConfig, ExperimentState, ExperimentStats,
+                    IslandState, MigrationConfig, PoolState)
 
 
 def _island_spec(axis: str):
@@ -143,6 +143,29 @@ def run_sharded(mesh: Mesh, problem: Problem,
     return ish, psh, epoch
 
 
+def _place_state(mesh: Mesh, axis: str, state: ExperimentState,
+                 ) -> ExperimentState:
+    """device_put an :class:`ExperimentState` onto ``mesh``: islands (and
+    AsyncState, when present) sharded over ``axis``, pool/key/epoch/stopped
+    replicated. Host-managed fields (stats, next_uuid) stay on host. A
+    restored checkpoint holds plain numpy, so this is also the elastic
+    reshard: leaves land with whatever shardings the *new* mesh asks for."""
+    def row_sharded(x):
+        return jax.device_put(x, NamedSharding(
+            mesh, P(axis, *([None] * (jnp.asarray(x).ndim - 1)))))
+
+    def replicated(x):
+        return jax.device_put(jnp.asarray(x), NamedSharding(mesh, P()))
+
+    return state._replace(
+        islands=jax.tree.map(row_sharded, state.islands),
+        pool=jax.tree.map(replicated, state.pool),
+        astate=jax.tree.map(row_sharded, state.astate),
+        key=replicated(state.key),
+        epoch=replicated(state.epoch),
+        stopped=replicated(state.stopped))
+
+
 def run_fused_sharded(mesh: Mesh, problem: Problem,
                       cfg: EAConfig = EAConfig(),
                       mig: MigrationConfig = MigrationConfig(),
@@ -151,41 +174,78 @@ def run_fused_sharded(mesh: Mesh, problem: Problem,
                       rng: Optional[Array] = None,
                       w2: bool = False,
                       axis: str = "islands",
-                      return_stats: bool = False):
-    """The whole sharded experiment as one ``shard_map(lax.scan)`` — a
-    single compile per topology, donated island/pool buffers, per-epoch
-    global stats stacked on device (psum/pmax-reduced, replicated).
-    Returns ``(islands, pool, epochs)`` (+ stacked stats when asked)."""
+                      return_stats: bool = False,
+                      snapshot_every: Optional[int] = None,
+                      snapshot_dir: Optional[str] = None,
+                      snapshot_keep: int = 3,
+                      checkpointer=None,
+                      resume: bool = False):
+    """The whole sharded experiment as ``shard_map(lax.scan)`` segments —
+    donated island/pool buffers, per-epoch global stats stacked on device
+    (psum/pmax-reduced, replicated). Returns ``(islands, pool, epochs)``
+    (+ stacked stats when asked). Durability kwargs as in
+    :func:`repro.core.evolution.run_fused`; restore lands leaves on host
+    and re-places them with *this* mesh's shardings, so a checkpoint from
+    one topology resumes on another (elastic volunteer pool)."""
     rng = jax.random.key(0) if rng is None else rng
+    n_islands = mesh.shape[axis] * islands_per_shard
+    ckpt = evolution_lib.resolve_checkpointer(snapshot_dir, checkpointer,
+                                              snapshot_keep)
+
     ish, psh, rng, _ = _init_sharded(mesh, axis, problem, cfg, mig,
                                      islands_per_shard, rng)
     _, k_loop = jax.random.split(rng)
+    state = ExperimentState(
+        islands=ish, pool=psh, astate=(), key=k_loop, epoch=jnp.int32(0),
+        stopped=jnp.asarray(False),
+        stats=evolution_lib.empty_stats() if return_stats else (),
+        next_uuid=jnp.int32(n_islands))
+    if resume:
+        if ckpt is None:
+            raise ValueError("resume=True needs snapshot_dir or checkpointer")
+        state = ckpt.restore_latest(target=state)
+        if int(jnp.asarray(state.islands.pop).shape[0]) != n_islands:
+            from repro.runtime import elastic as elastic_lib  # deferred: avoid cycle
+            state = elastic_lib.resize_experiment(state, n_islands, problem,
+                                                  cfg)
+    state = _place_state(mesh, axis, state)
 
-    def build():
-        # with return_stats=False the scan emits () in the stats slot and
-        # skips the per-epoch psum/pmax scalar reductions entirely
-        stats_spec = (ExperimentStats(*[P()] * len(ExperimentStats._fields))
-                      if return_stats else ())
-        fn = shard_map(
-            partial(evolution_lib.fused_scan, problem=problem, cfg=cfg,
-                    mig=mig, w2=w2, max_epochs=max_epochs, axis=axis,
-                    with_stats=return_stats),
-            mesh=mesh,
-            in_specs=(_island_spec(axis), _pool_spec(), P()),
-            out_specs=(_island_spec(axis), _pool_spec(), P(), stats_spec),
-            check=False,
-        )
-        return jax.jit(fn, donate_argnums=(0, 1))
+    def segment_fn(state: ExperimentState, seg_len: int):
+        def build():
+            # with return_stats=False the scan emits () in the stats slot
+            # and skips the per-epoch psum/pmax scalar reductions entirely
+            stats_spec = (ExperimentStats(
+                *[P()] * len(ExperimentStats._fields))
+                if return_stats else ())
+            fn = shard_map(
+                partial(evolution_lib.fused_scan, problem=problem, cfg=cfg,
+                        mig=mig, w2=w2, max_epochs=seg_len, axis=axis,
+                        with_stats=return_stats),
+                mesh=mesh,
+                in_specs=(_island_spec(axis), _pool_spec(), P(), P(), P()),
+                out_specs=(_island_spec(axis), _pool_spec(), P(), P(), P(),
+                           stats_spec),
+                check=False,
+            )
+            return jax.jit(fn, donate_argnums=(0, 1))
 
-    run = evolution_lib.fused_jit(
-        problem,
-        ("sharded", cfg, mig, w2, max_epochs, axis, mesh, return_stats),
-        build)
-    ish, psh = evolution_lib.unique_buffers((ish, psh))
-    islands, pool, epochs, stats = run(ish, psh, k_loop)
+        run = evolution_lib.fused_jit(
+            problem,
+            ("sharded", cfg, mig, w2, seg_len, axis, mesh, return_stats),
+            build)
+        islands, pool = evolution_lib.unique_buffers(
+            (state.islands, state.pool))
+        islands, pool, key, epoch, stopped, seg_stats = run(
+            islands, pool, state.key, state.epoch, state.stopped)
+        return state._replace(islands=islands, pool=pool, key=key,
+                              epoch=epoch, stopped=stopped), seg_stats
+
+    state = evolution_lib.run_segments(
+        state, max_epochs, segment_fn, snapshot_every=snapshot_every,
+        checkpointer=ckpt, w2=w2, return_stats=return_stats)
     if return_stats:
-        return islands, pool, epochs, stats
-    return islands, pool, epochs
+        return state.islands, state.pool, state.epoch, state.stats
+    return state.islands, state.pool, state.epoch
 
 
 # ---------------------------------------------------------------------------
@@ -205,53 +265,84 @@ def run_fused_sharded_async(mesh: Mesh, problem: Problem,
                             w2: bool = False,
                             axis: str = "islands",
                             return_stats: bool = False,
-                            return_astate: bool = False):
+                            return_astate: bool = False,
+                            snapshot_every: Optional[int] = None,
+                            snapshot_dir: Optional[str] = None,
+                            snapshot_keep: int = 3,
+                            checkpointer=None,
+                            resume: bool = False):
     """Asynchronous :func:`run_fused_sharded`: the whole churn-tolerant
-    per-island-clock experiment as one ``shard_map(lax.scan)``. Islands and
-    their :class:`~repro.core.async_migration.AsyncState` (clock, rate,
-    churn window, immigrant inbox) are sharded over ``axis``; the pool is
-    replicated; the per-shard fire mask is the vector availability for the
-    topology collectives. In the degenerate ``acfg`` this is bit-for-bit
-    :func:`run_fused_sharded`."""
+    per-island-clock experiment as ``shard_map(lax.scan)`` segments.
+    Islands and their :class:`~repro.core.async_migration.AsyncState`
+    (clock, rate, churn window, immigrant inbox) are sharded over ``axis``;
+    the pool is replicated; the per-shard fire mask is the vector
+    availability for the topology collectives. In the degenerate ``acfg``
+    this is bit-for-bit :func:`run_fused_sharded`. Durability kwargs as in
+    :func:`run_fused_sharded` — the snapshot additionally carries the
+    sharded AsyncState."""
     rng = jax.random.key(0) if rng is None else rng
+    n_islands = mesh.shape[axis] * islands_per_shard
+    ckpt = evolution_lib.resolve_checkpointer(snapshot_dir, checkpointer,
+                                              snapshot_keep)
+
     ish, psh, rng, k_init = _init_sharded(mesh, axis, problem, cfg, mig,
                                           islands_per_shard, rng)
     _, k_loop = jax.random.split(rng)
-    n_islands = mesh.shape[axis] * islands_per_shard
     astate = async_lib.init_async_state(
         jax.random.fold_in(k_init, 7), n_islands, acfg, max_ticks,
         problem.genome)
-    astate = jax.tree.map(
-        lambda x: jax.device_put(x, NamedSharding(
-            mesh, P(axis, *([None] * (x.ndim - 1))))),
-        astate)
+    state = ExperimentState(
+        islands=ish, pool=psh, astate=astate, key=k_loop,
+        epoch=jnp.int32(0), stopped=jnp.asarray(False),
+        stats=evolution_lib.empty_stats() if return_stats else (),
+        next_uuid=jnp.int32(n_islands))
+    if resume:
+        if ckpt is None:
+            raise ValueError("resume=True needs snapshot_dir or checkpointer")
+        state = ckpt.restore_latest(target=state)
+        if int(jnp.asarray(state.islands.pop).shape[0]) != n_islands:
+            from repro.runtime import elastic as elastic_lib  # deferred: avoid cycle
+            state = elastic_lib.resize_experiment(state, n_islands, problem,
+                                                  cfg)
+    state = _place_state(mesh, axis, state)
 
-    def build():
-        stats_spec = (ExperimentStats(*[P()] * len(ExperimentStats._fields))
-                      if return_stats else ())
-        fn = shard_map(
-            partial(async_lib.fused_scan_async, problem=problem, cfg=cfg,
-                    mig=mig, acfg=acfg, w2=w2, max_ticks=max_ticks,
-                    axis=axis, with_stats=return_stats),
-            mesh=mesh,
-            in_specs=(_island_spec(axis), _pool_spec(), _astate_spec(axis),
-                      P()),
-            out_specs=(_island_spec(axis), _pool_spec(), _astate_spec(axis),
-                       P(), stats_spec),
-            check=False,
-        )
-        return jax.jit(fn, donate_argnums=(0, 1, 2))
+    def segment_fn(state: ExperimentState, seg_len: int):
+        def build():
+            stats_spec = (ExperimentStats(
+                *[P()] * len(ExperimentStats._fields))
+                if return_stats else ())
+            fn = shard_map(
+                partial(async_lib.fused_scan_async, problem=problem,
+                        cfg=cfg, mig=mig, acfg=acfg, w2=w2,
+                        max_ticks=seg_len, axis=axis,
+                        with_stats=return_stats),
+                mesh=mesh,
+                in_specs=(_island_spec(axis), _pool_spec(),
+                          _astate_spec(axis), P(), P(), P()),
+                out_specs=(_island_spec(axis), _pool_spec(),
+                           _astate_spec(axis), P(), P(), P(), stats_spec),
+                check=False,
+            )
+            return jax.jit(fn, donate_argnums=(0, 1, 2))
 
-    run = evolution_lib.fused_jit(
-        problem,
-        ("sharded_async", cfg, mig, acfg, w2, max_ticks, axis, mesh,
-         return_stats),
-        build)
-    ish, psh, astate = evolution_lib.unique_buffers((ish, psh, astate))
-    islands, pool, astate, ticks, stats = run(ish, psh, astate, k_loop)
-    out = (islands, pool, ticks)
+        run = evolution_lib.fused_jit(
+            problem,
+            ("sharded_async", cfg, mig, acfg, w2, seg_len, axis, mesh,
+             return_stats),
+            build)
+        islands, pool, astate = evolution_lib.unique_buffers(
+            (state.islands, state.pool, state.astate))
+        islands, pool, astate, key, tick, stopped, seg_stats = run(
+            islands, pool, astate, state.key, state.epoch, state.stopped)
+        return state._replace(islands=islands, pool=pool, astate=astate,
+                              key=key, epoch=tick, stopped=stopped), seg_stats
+
+    state = evolution_lib.run_segments(
+        state, max_ticks, segment_fn, snapshot_every=snapshot_every,
+        checkpointer=ckpt, w2=w2, return_stats=return_stats)
+    out = (state.islands, state.pool, state.epoch)
     if return_stats:
-        out += (stats,)
+        out += (state.stats,)
     if return_astate:
-        out += (astate,)
+        out += (state.astate,)
     return out

@@ -195,3 +195,45 @@ class ExperimentStats(NamedTuple):
     total_evaluations: Array
     n_done: Array             # islands that found the optimum
     experiments_solved: Array  # cumulative W² solved-experiment count
+
+
+class ExperimentState(NamedTuple):
+    """The *whole* run state of one experiment — the unit of durability.
+
+    Everything a fused driver carries across epochs lives here, so a
+    device->host snapshot of this one pytree is sufficient to kill the
+    process and resume bit-for-bit (checkpoint.Checkpointer serializes it;
+    the segmented drivers in core.evolution / core.async_migration /
+    core.sharded produce and consume it).  NodIO's stance made state: the
+    experiment, not the process, is the durable object.
+
+    Fields carried through the device scan (the drivers' scan carry — a
+    static meta-test pins this correspondence so new carry state cannot
+    silently escape checkpointing):
+
+    islands:   IslandState batch (leading axis = islands)
+    pool:      PoolState (the replicated device pool)
+    astate:    AsyncState for the async runtimes, ``()`` for sync drivers
+    key:       () PRNG key — the driver loop's migration-key stream
+    epoch:     () int32 — epochs (sync) / ticks (async) completed
+    stopped:   () bool — early-success latch (non-W²)
+
+    Host-managed fields (not in the scan carry, documented as such in the
+    coverage meta-test):
+
+    stats:     stacked per-epoch ExperimentStats rows recorded so far
+               (numpy, leading axis = epochs), or ``()`` when the run was
+               started without stats
+    next_uuid: () int32 — monotonic island-uuid watermark; elastic grow
+               allocates from here so a shrink->grow sequence never hands
+               a joiner a departed island's identity
+    """
+
+    islands: IslandState
+    pool: PoolState
+    astate: Any
+    key: Array
+    epoch: Array
+    stopped: Array
+    stats: Any
+    next_uuid: Array

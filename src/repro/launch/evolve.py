@@ -46,6 +46,9 @@ def run_ea(problem_name: str = "trap", islands: int = 8, epochs: int = 50,
            bridge: bool = False, runtime: str = "sync",
            acfg: AsyncConfig = None, acceptance: str = "always",
            acceptance_epsilon: float = 0.0, impl: str = "jnp",
+           max_pop: int = None, min_pop: int = None,
+           gens_per_epoch: int = None, snapshot_every: int = None,
+           snapshot_dir: str = None, resume: bool = False,
            **problem_kwargs):
     """Run the NodIO experiment. ``topology`` selects the registered
     migration strategy, ``fused`` the lax.scan driver (single compile, max
@@ -59,9 +62,23 @@ def run_ea(problem_name: str = "trap", islands: int = 8, epochs: int = 50,
     ``acceptance_epsilon`` is the 'dedup' rejection radius; the bridged
     PoolServer mirrors the same policy so host and device pools agree.
     ``impl`` selects the generation-operator engine (repro.kernels.ga):
-    'jnp' is the classic path, 'pallas' the fused megakernel."""
+    'jnp' is the classic path, 'pallas' the fused megakernel.
+
+    Durability (fused drivers only): ``snapshot_every``/``snapshot_dir``
+    snapshot the full ExperimentState between scan segments; ``resume=True``
+    restores the latest snapshot and continues bit-for-bit — kill -9 the
+    process mid-run, rerun with ``resume``, and the final state equals the
+    uninterrupted seeded run (scripts/kill_resume_smoke.py exercises this).
+    A resume with a different ``islands`` count triggers elastic resize."""
     problem = make_problem(problem_name, **problem_kwargs)
-    cfg = EAConfig(impl=impl)
+    ea_kw = {"impl": impl}
+    if max_pop is not None:
+        ea_kw["max_pop"] = max_pop
+    if min_pop is not None:
+        ea_kw["min_pop"] = min_pop
+    if gens_per_epoch is not None:
+        ea_kw["generations_per_epoch"] = gens_per_epoch
+    cfg = EAConfig(**ea_kw)
     acc = AcceptanceConfig(policy=acceptance, epsilon=acceptance_epsilon)
     mig = MigrationConfig(topology=topology, acceptance=acc)
     is_async = runtime == "async"
@@ -72,6 +89,12 @@ def run_ea(problem_name: str = "trap", islands: int = 8, epochs: int = 50,
               "(incl. the sharded async driver) runs entirely on device — "
               "bridge disabled")
         bridge = False
+    snap_kw = {"snapshot_every": snapshot_every, "snapshot_dir": snapshot_dir,
+               "resume": resume}
+    if snapshot_dir is not None and not (fused or (sharded and is_async)):
+        print("note: --snapshot-dir snapshots the fused lax.scan drivers; "
+              "host-loop drivers are not segmented — snapshotting disabled")
+        snap_kw = {}
     server = PoolServer(capacity=256, seed=seed,
                         acceptance=acc if acceptance != "always" else None
                         ) if bridge else None
@@ -88,11 +111,13 @@ def run_ea(problem_name: str = "trap", islands: int = 8, epochs: int = 50,
             # async sharded is fused-only (one shard_map(lax.scan) driver)
             isl, pool, ep = run_fused_sharded_async(
                 mesh, problem, cfg, mig, acfg, islands_per_shard=per,
-                max_ticks=epochs, w2=w2, rng=jax.random.key(seed))
+                max_ticks=epochs, w2=w2, rng=jax.random.key(seed),
+                **snap_kw)
         elif fused:
             isl, pool, ep = run_fused_sharded(
                 mesh, problem, cfg, mig, islands_per_shard=per,
-                max_epochs=epochs, w2=w2, rng=jax.random.key(seed))
+                max_epochs=epochs, w2=w2, rng=jax.random.key(seed),
+                **snap_kw)
         else:
             isl, pool, ep = run_sharded(mesh, problem, cfg, mig,
                                         islands_per_shard=per,
@@ -104,16 +129,18 @@ def run_ea(problem_name: str = "trap", islands: int = 8, epochs: int = 50,
             print(f"[sharded x{n_shards} {'fused ' if fused else ''}"
                   f"{'async ' if is_async else ''}topo={topology}] "
                   f"best={best} epochs={int(ep)} ({time.time()-t0:.1f}s)")
+            print(f"final best={best!r} epochs={int(ep)}")
         return isl, pool
     if fused:
         run = (partial(run_fused_async, acfg=acfg, max_ticks=epochs)
                if is_async else partial(run_fused, max_epochs=epochs))
         isl, pool, ep = run(problem, cfg, mig, n_islands=islands, w2=w2,
-                            rng=jax.random.key(seed))
+                            rng=jax.random.key(seed), **snap_kw)
         if verbose:
             best = float(jax.device_get(isl.best_fitness.max()))
             print(f"[fused {'async ' if is_async else ''}topo={topology}] "
                   f"best={best} epochs={int(ep)} ({time.time()-t0:.1f}s)")
+            print(f"final best={best!r} epochs={int(ep)}")
         return isl, pool
     if is_async:
         res = run_experiment_async(problem, cfg, mig, acfg,
@@ -189,8 +216,24 @@ def main(argv=None):
     ea.add_argument("--problem", default="trap")
     ea.add_argument("--islands", type=int, default=8)
     ea.add_argument("--epochs", type=int, default=50)
+    ea.add_argument("--seed", type=int, default=0)
     ea.add_argument("--w2", action="store_true")
     ea.add_argument("--sharded", action="store_true")
+    ea.add_argument("--max-pop", type=int, default=None,
+                    help="static lane count (padded population)")
+    ea.add_argument("--min-pop", type=int, default=None,
+                    help="W² lower population bound")
+    ea.add_argument("--gens-per-epoch", type=int, default=None,
+                    help="generations between migrations (paper's n)")
+    ea.add_argument("--snapshot-every", type=int, default=None,
+                    help="snapshot the full ExperimentState every N epochs "
+                         "(fused drivers; enables kill -9 + --resume)")
+    ea.add_argument("--snapshot-dir", default=None,
+                    help="checkpoint directory for --snapshot-every/--resume")
+    ea.add_argument("--resume", action="store_true",
+                    help="restore the latest snapshot from --snapshot-dir "
+                         "and continue bit-for-bit (elastic: a different "
+                         "--islands count resizes the restored state)")
     ea.add_argument("--topology", default="pool",
                     choices=available_topologies(),
                     help="registered migration topology (core.migration)")
@@ -246,10 +289,14 @@ def main(argv=None):
                            staleness=args.staleness,
                            churn_fraction=args.churn)
         run_ea(args.problem, args.islands, args.epochs, args.w2,
-               args.sharded, topology=args.topology, fused=args.fused,
-               bridge=args.bridge, runtime=args.runtime, acfg=acfg,
-               acceptance=args.acceptance,
-               acceptance_epsilon=args.acceptance_epsilon, impl=args.impl)
+               args.sharded, seed=args.seed, topology=args.topology,
+               fused=args.fused, bridge=args.bridge, runtime=args.runtime,
+               acfg=acfg, acceptance=args.acceptance,
+               acceptance_epsilon=args.acceptance_epsilon, impl=args.impl,
+               max_pop=args.max_pop, min_pop=args.min_pop,
+               gens_per_epoch=args.gens_per_epoch,
+               snapshot_every=args.snapshot_every,
+               snapshot_dir=args.snapshot_dir, resume=args.resume)
     else:
         run_pbt(args.arch, args.members, args.epochs, args.steps_per_epoch)
 

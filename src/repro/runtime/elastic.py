@@ -9,12 +9,20 @@ the tab removes one. Here that is a *reshape of the island batch*:
   their progress is not entirely lost (the paper's pool-as-persistence).
 
 Both operations are pure host-side tree surgery — they compose with
-checkpoint.restore for restart-time elasticity (restore a 64-island
-checkpoint into a 256-island run, or vice versa).
+checkpoint.restore for restart-time elasticity: the segmented drivers
+(core.evolution / core.async_migration / core.sharded) call
+:func:`resize_experiment` when a resumed checkpoint's island count differs
+from the requested one (restore a 8-island checkpoint into a 16-island
+run, or vice versa).
+
+Island identity: joiners get uuids from a *monotonic watermark*
+(``ExperimentState.next_uuid``), never from the current batch size — a
+shrink followed by a grow must not hand a new volunteer a departed
+island's identity (host pools key per-island accounting on uuid).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +31,11 @@ import numpy as np
 from repro.core import island as island_lib
 from repro.core import pool as pool_lib
 from repro.core.problems import Problem
-from repro.core.types import EAConfig, IslandState, PoolState
+from repro.core.types import EAConfig, ExperimentState, IslandState, PoolState
+
+# Grown islands must never hit their churn window whatever the run length:
+# down_start strictly above any reachable tick (int32 ticks).
+NEVER_CHURN = 2**31 - 1
 
 
 def shrink_islands(islands: IslandState, keep: int) -> IslandState:
@@ -36,12 +48,23 @@ def shrink_islands(islands: IslandState, keep: int) -> IslandState:
 
 def grow_islands(islands: IslandState, n_new: int, problem: Problem,
                  cfg: EAConfig, pool: Optional[PoolState],
-                 rng: jax.Array) -> IslandState:
-    """Add ``n_new`` fresh islands, seeded from the pool when available."""
+                 rng: jax.Array,
+                 next_uuid: Optional[jax.Array | int] = None) -> IslandState:
+    """Add ``n_new`` fresh islands, seeded from the pool when available.
+
+    ``next_uuid`` is the identity watermark for the joiners (they get
+    ``next_uuid .. next_uuid + n_new - 1``). The default —
+    ``max(existing uuids) + 1`` — is safe for grow-only histories; callers
+    that also shrink must thread the ``ExperimentState.next_uuid``
+    watermark instead, because after a shrink the max *surviving* uuid no
+    longer proves which identities were ever handed out.
+    """
     n_old = int(islands.pop.shape[0])
+    if next_uuid is None:
+        next_uuid = jnp.max(islands.uuid) + 1
     k_init, k_get = jax.random.split(rng)
     keys = jax.random.split(k_init, n_new)
-    uuids = jnp.arange(n_old, n_old + n_new, dtype=jnp.int32)
+    uuids = jnp.asarray(next_uuid, jnp.int32) + jnp.arange(n_new, dtype=jnp.int32)
     fresh = jax.vmap(
         lambda k, u: island_lib.init_island(k, problem, cfg, u))(keys, uuids)
     if pool is not None:
@@ -50,3 +73,64 @@ def grow_islands(islands: IslandState, n_new: int, problem: Problem,
         fresh = jax.vmap(island_lib.receive_immigrant)(fresh, *gets)
     return jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
                         islands, fresh)
+
+
+def grow_async_state(astate, n_new: int):
+    """Extend an :class:`~repro.core.async_migration.AsyncState` batch with
+    ``n_new`` joiner rows under churn-rejoin semantics: fresh clock, the
+    batch-mean volunteer rate (deterministic, keeps the speed scale), an
+    empty inbox, and a down-window that never opens — a freshly joined
+    browser doesn't inherit a departed volunteer's disconnect schedule."""
+    def joiner(name: str):
+        x = jnp.asarray(getattr(astate, name))
+        shape = (n_new,) + x.shape[1:]
+        if name == "rate":
+            return jnp.full(shape, jnp.mean(x), x.dtype)
+        if name in ("down_start", "down_end"):
+            return jnp.full(shape, NEVER_CHURN, x.dtype)
+        if name == "inbox_fitness":
+            return jnp.full(shape, pool_lib.NEG_INF, x.dtype)
+        if name == "inbox_born":
+            return jnp.full(shape, -1, x.dtype)
+        return jnp.zeros(shape, x.dtype)
+
+    fresh = type(astate)(**{f: joiner(f) for f in type(astate)._fields})
+    return jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                        astate, fresh)
+
+
+def resize_experiment(state: ExperimentState, n_islands: int,
+                      problem: Problem, cfg: EAConfig) -> ExperimentState:
+    """Elastically resize a restored :class:`ExperimentState` to
+    ``n_islands`` islands (the restart-time volunteer count).
+
+    shrink: tree-slice the first ``n_islands`` islands (and async rows).
+    grow:   fresh islands seeded by a pool GET, uuids allocated from the
+            ``next_uuid`` watermark; async rows (when the state carries an
+            AsyncState) join with churn-rejoin semantics.
+
+    Deterministic: the joiner keys are folded out of the carried loop key
+    without consuming it, so a resumed-and-resized run stays seeded.
+    """
+    dev = jax.tree.map(jnp.asarray, (state.islands, state.pool, state.astate,
+                                     state.key, state.next_uuid))
+    state = state._replace(islands=dev[0], pool=dev[1], astate=dev[2],
+                           key=dev[3], next_uuid=dev[4])
+    n_now = int(state.islands.pop.shape[0])
+    if n_islands == n_now:
+        return state
+    # AsyncState is itself a tuple subclass — the empty sync slot is ()
+    has_astate = hasattr(state.astate, "_fields")
+    if n_islands < n_now:
+        islands = shrink_islands(state.islands, n_islands)
+        astate = (jax.tree.map(lambda x: x[:n_islands], state.astate)
+                  if has_astate else state.astate)
+        return state._replace(islands=islands, astate=astate)
+    n_new = n_islands - n_now
+    k_join = jax.random.fold_in(state.key, 0x05A1)
+    islands = grow_islands(state.islands, n_new, problem, cfg, state.pool,
+                           k_join, next_uuid=state.next_uuid)
+    astate = (grow_async_state(state.astate, n_new)
+              if has_astate else state.astate)
+    return state._replace(islands=islands, astate=astate,
+                          next_uuid=state.next_uuid + jnp.int32(n_new))

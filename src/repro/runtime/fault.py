@@ -13,14 +13,24 @@ from typing import Callable, Iterable, Optional, Tuple, Type, TypeVar
 
 T = TypeVar("T")
 
+# Default jitter stream for callers that don't care about determinism —
+# module-owned, so seeding the *global* random module elsewhere neither
+# perturbs nor is perturbed by retry backoff.
+_JITTER = random.Random()
+
 
 def retry(fn: Callable[[], T], *, retries: int = 3, base_delay: float = 0.01,
           max_delay: float = 1.0,
           exceptions: Tuple[Type[BaseException], ...] = (Exception,),
           on_give_up: Optional[Callable[[BaseException], T]] = None,
-          sleep: Callable[[float], None] = time.sleep) -> T:
+          sleep: Callable[[float], None] = time.sleep,
+          rng: Optional[random.Random] = None) -> T:
     """Exponential backoff with jitter; ``on_give_up`` turns the final
-    failure into a degraded-mode value instead of raising."""
+    failure into a degraded-mode value instead of raising. ``rng`` (a
+    ``random.Random``) seeds the jitter stream — pass one in tests so the
+    backoff schedule is deterministic (the RNG02 discipline: no seeded
+    code path may draw from the global ``random`` module)."""
+    jitter = _JITTER if rng is None else rng
     delay = base_delay
     last: Optional[BaseException] = None
     for attempt in range(retries + 1):
@@ -30,7 +40,7 @@ def retry(fn: Callable[[], T], *, retries: int = 3, base_delay: float = 0.01,
             last = e
             if attempt == retries:
                 break
-            sleep(delay * (0.5 + random.random()))
+            sleep(delay * (0.5 + jitter.random()))
             delay = min(delay * 2, max_delay)
     if on_give_up is not None:
         return on_give_up(last)  # type: ignore[arg-type]

@@ -1,0 +1,519 @@
+"""Durable experiment lifecycle (ISSUE 8).
+
+* segmented fused drivers (sync / async / sharded) are bit-for-bit the
+  monolithic scan, and a resume from the last surviving snapshot
+  reproduces the uninterrupted seeded run exactly;
+* elastic resume: an 8-island checkpoint restores into a 16-island run
+  (grow seeds from the pool, uuids from the monotonic watermark) and into
+  a smaller one (shrink);
+* the PoolServer journal is a write-ahead log: a restarted server
+  rehydrates entries/seq/cursors/stats and preserves exactly-once
+  ``get_since`` delivery — including through a torn final line;
+* Checkpointer regressions: wait() drains errors instead of re-raising
+  forever, save_async prunes finished writer threads, stale ``.tmp``
+  build dirs are ignored and swept;
+* restore-time validation: structure mismatch, truncated leaf, missing
+  manifest;
+* retry() jitter is seedable (RNG02 discipline);
+* meta: the ExperimentState fields are statically pinned to the scan
+  carries of the fused drivers (new carry state cannot silently escape
+  checkpointing).
+"""
+import os
+import random
+import shutil
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer, latest_step, restore, save, sweep_tmp
+from repro.core import (AsyncConfig, EAConfig, ExperimentState, PoolServer,
+                        make_onemax, run_fused, run_fused_async)
+from repro.core import island as island_lib
+from repro.core import pool as pool_lib
+from repro.core.evolution import empty_stats, segment_plan
+from repro.core.types import AcceptanceConfig
+from repro.runtime import elastic
+from repro.runtime.fault import retry
+
+CFG = EAConfig(max_pop=32, min_pop=32, generations_per_epoch=3,
+               max_evaluations=10**9)
+PROBLEM = make_onemax(24)
+KEY = jax.random.key(42)
+
+
+def leaves(t):
+    out = []
+    for x in jax.tree.leaves(t):
+        if hasattr(x, "dtype") and jax.dtypes.issubdtype(
+                x.dtype, jax.dtypes.prng_key):
+            x = jax.random.key_data(x)
+        out.append(np.asarray(x))
+    return out
+
+
+def trees_equal(a, b):
+    return all(np.array_equal(x, y) for x, y in zip(leaves(a), leaves(b)))
+
+
+def drop_last_snapshot(d):
+    """Simulate a kill -9 after the second-to-last snapshot landed."""
+    steps = sorted(int(p.split("_")[1]) for p in os.listdir(d)
+                   if p.startswith("step_") and not p.endswith(".tmp"))
+    assert len(steps) >= 2, steps
+    shutil.rmtree(os.path.join(d, f"step_{steps[-1]:08d}"))
+
+
+class TestSegmentPlan:
+    def test_shapes(self):
+        assert segment_plan(0, 10, 4) == [4, 4, 2]
+        assert segment_plan(4, 10, 4) == [4, 2]
+        assert segment_plan(10, 10, 4) == []
+        assert segment_plan(0, 10, None) == [10]
+        assert segment_plan(0, 10, 0) == [10]
+        assert segment_plan(3, 10, None) == [7]
+
+    def test_at_most_two_distinct_lengths(self):
+        plan = segment_plan(0, 103, 7)
+        assert sum(plan) == 103 and len(set(plan)) <= 2
+
+
+class TestSegmentedSync:
+    def test_segmented_equals_monolithic(self, tmp_path):
+        a = run_fused(PROBLEM, CFG, n_islands=4, max_epochs=8, rng=KEY,
+                      return_stats=True)
+        b = run_fused(PROBLEM, CFG, n_islands=4, max_epochs=8, rng=KEY,
+                      return_stats=True, snapshot_every=3,
+                      snapshot_dir=str(tmp_path))
+        assert trees_equal((a[0], a[1], a[3]), (b[0], b[1], b[3]))
+        assert int(a[2]) == int(b[2])
+
+    def test_kill_and_resume_bit_identical(self, tmp_path):
+        full = run_fused(PROBLEM, CFG, n_islands=4, max_epochs=8, rng=KEY,
+                         return_stats=True, snapshot_every=2,
+                         snapshot_dir=str(tmp_path))
+        drop_last_snapshot(str(tmp_path))
+        res = run_fused(PROBLEM, CFG, n_islands=4, max_epochs=8, rng=KEY,
+                        return_stats=True, snapshot_every=2,
+                        snapshot_dir=str(tmp_path), resume=True)
+        assert trees_equal((full[0], full[1], full[3]),
+                           (res[0], res[1], res[3]))
+        assert int(full[2]) == int(res[2])
+
+    def test_resume_without_dir_raises(self):
+        with pytest.raises(ValueError, match="resume"):
+            run_fused(PROBLEM, CFG, n_islands=4, max_epochs=2, resume=True)
+
+    def test_resume_of_finished_run_is_noop_replay(self, tmp_path):
+        full = run_fused(PROBLEM, CFG, n_islands=4, max_epochs=6, rng=KEY,
+                         snapshot_every=2, snapshot_dir=str(tmp_path))
+        again = run_fused(PROBLEM, CFG, n_islands=4, max_epochs=6, rng=KEY,
+                          snapshot_every=2, snapshot_dir=str(tmp_path),
+                          resume=True)
+        assert trees_equal(full[0], again[0])
+
+
+class TestSegmentedAsync:
+    ACFG = AsyncConfig(min_rate=0.5, max_rate=1.0, staleness=2,
+                       churn_fraction=0.3, inbox_capacity=3)
+
+    def test_kill_and_resume_with_astate(self, tmp_path):
+        full = run_fused_async(PROBLEM, CFG, acfg=self.ACFG, n_islands=4,
+                               max_ticks=9, rng=KEY, return_stats=True,
+                               return_astate=True, snapshot_every=3,
+                               snapshot_dir=str(tmp_path))
+        drop_last_snapshot(str(tmp_path))
+        res = run_fused_async(PROBLEM, CFG, acfg=self.ACFG, n_islands=4,
+                              max_ticks=9, rng=KEY, return_stats=True,
+                              return_astate=True, snapshot_every=3,
+                              snapshot_dir=str(tmp_path), resume=True)
+        # islands, pool, ticks, stats AND the async clocks/inbox/churn state
+        assert trees_equal(full, res)
+
+    def test_degenerate_async_segments_match_sync(self, tmp_path):
+        sync = run_fused(PROBLEM, CFG, n_islands=4, max_epochs=6, rng=KEY,
+                         return_stats=True)
+        asyn = run_fused_async(PROBLEM, CFG, acfg=AsyncConfig(), n_islands=4,
+                               max_ticks=6, rng=KEY, return_stats=True,
+                               snapshot_every=2, snapshot_dir=str(tmp_path))
+        assert trees_equal((sync[0], sync[3]), (asyn[0], asyn[3]))
+
+
+class TestShardedDurability:
+    def _mesh(self):
+        from jax.sharding import Mesh
+        return Mesh(np.array(jax.devices()), ("islands",))
+
+    def test_sharded_kill_and_resume(self, tmp_path):
+        from repro.core.sharded import run_fused_sharded
+        mesh = self._mesh()
+        per = max(1, 4 // mesh.shape["islands"])
+        full = run_fused_sharded(mesh, PROBLEM, CFG, islands_per_shard=per,
+                                 max_epochs=8, rng=KEY, return_stats=True,
+                                 snapshot_every=2, snapshot_dir=str(tmp_path))
+        drop_last_snapshot(str(tmp_path))
+        res = run_fused_sharded(mesh, PROBLEM, CFG, islands_per_shard=per,
+                                max_epochs=8, rng=KEY, return_stats=True,
+                                snapshot_every=2, snapshot_dir=str(tmp_path),
+                                resume=True)
+        assert trees_equal((full[0], full[1], full[3]),
+                           (res[0], res[1], res[3]))
+
+    def test_sharded_async_kill_and_resume(self, tmp_path):
+        from repro.core.sharded import run_fused_sharded_async
+        mesh = self._mesh()
+        per = max(1, 4 // mesh.shape["islands"])
+        acfg = AsyncConfig(min_rate=0.5, max_rate=1.0, staleness=2,
+                           churn_fraction=0.25, inbox_capacity=3)
+        full = run_fused_sharded_async(
+            mesh, PROBLEM, CFG, acfg=acfg, islands_per_shard=per,
+            max_ticks=9, rng=KEY, return_stats=True, return_astate=True,
+            snapshot_every=4, snapshot_dir=str(tmp_path))
+        drop_last_snapshot(str(tmp_path))
+        res = run_fused_sharded_async(
+            mesh, PROBLEM, CFG, acfg=acfg, islands_per_shard=per,
+            max_ticks=9, rng=KEY, return_stats=True, return_astate=True,
+            snapshot_every=4, snapshot_dir=str(tmp_path), resume=True)
+        assert trees_equal(full, res)
+
+
+class TestElasticResume:
+    # hard enough that 6 epochs never hit the early-stop latch — the
+    # resumed run must actually *continue*, not replay a finished state
+    HARD = make_onemax(96)
+
+    def test_eight_island_checkpoint_resumes_as_sixteen(self, tmp_path):
+        run_fused(self.HARD, CFG, n_islands=8, max_epochs=4, rng=KEY,
+                  snapshot_every=2, snapshot_dir=str(tmp_path))
+        isl, pool, ep = run_fused(self.HARD, CFG, n_islands=16, max_epochs=6,
+                                  rng=KEY, snapshot_dir=str(tmp_path),
+                                  resume=True)
+        assert isl.pop.shape[0] == 16
+        # joiners get fresh identities above the watermark
+        assert sorted(np.asarray(isl.uuid).tolist()) == list(range(16))
+        assert int(ep) == 6
+
+    def test_shrink_resume(self, tmp_path):
+        run_fused(self.HARD, CFG, n_islands=8, max_epochs=4, rng=KEY,
+                  snapshot_every=2, snapshot_dir=str(tmp_path))
+        isl, _, ep = run_fused(self.HARD, CFG, n_islands=4, max_epochs=6,
+                               rng=KEY, snapshot_dir=str(tmp_path),
+                               resume=True)
+        assert isl.pop.shape[0] == 4
+        assert sorted(np.asarray(isl.uuid).tolist()) == [0, 1, 2, 3]
+        assert int(ep) == 6
+
+
+class TestUuidWatermark:
+    def _state(self, n):
+        islands = island_lib.init_islands(jax.random.key(0), n, PROBLEM, CFG)
+        pool = pool_lib.pool_init(16, PROBLEM.genome)
+        return ExperimentState(islands=islands, pool=pool, astate=(),
+                               key=jax.random.key(1), epoch=jnp.int32(0),
+                               stopped=jnp.asarray(False), stats=(),
+                               next_uuid=jnp.int32(n))
+
+    def test_shrink_then_grow_never_reuses_uuids(self):
+        state = self._state(4)
+        state = elastic.resize_experiment(state, 2, PROBLEM, CFG)
+        assert sorted(np.asarray(state.islands.uuid).tolist()) == [0, 1]
+        state = elastic.resize_experiment(state, 5, PROBLEM, CFG)
+        got = sorted(np.asarray(state.islands.uuid).tolist())
+        # departed islands 2 and 3 keep their identities forever
+        assert got == [0, 1, 4, 5, 6]
+        assert int(state.next_uuid) == 7
+
+    def test_grow_islands_default_watermark_is_max_plus_one(self):
+        islands = island_lib.init_islands(jax.random.key(0), 2, PROBLEM, CFG)
+        grown = elastic.grow_islands(islands, 2, PROBLEM, CFG, None,
+                                     jax.random.key(5))
+        assert sorted(np.asarray(grown.uuid).tolist()) == [0, 1, 2, 3]
+
+    def test_async_joiners_never_churn(self):
+        from repro.core.async_migration import init_async_state
+        acfg = AsyncConfig(min_rate=0.5, max_rate=1.0, churn_fraction=1.0)
+        astate = init_async_state(jax.random.key(0), 4, acfg, 10,
+                                  PROBLEM.genome)
+        grown = elastic.grow_async_state(astate, 3)
+        assert grown.clock.shape[0] == 7
+        assert np.all(np.asarray(grown.down_start[4:]) == elastic.NEVER_CHURN)
+        assert np.all(np.asarray(grown.inbox_fitness[4:]) == pool_lib.NEG_INF)
+        # rate scale is preserved (batch mean), clocks/fires start at zero
+        assert np.all(np.asarray(grown.fires[4:]) == 0)
+
+
+class TestPoolServerWAL:
+    def _fill(self, server, n, length=6):
+        for i in range(n):
+            server.put(np.full(length, i % 120, np.int8), float(i), uuid=i)
+
+    def test_rehydrate_entries_seq_and_stats(self, tmp_path):
+        jp = str(tmp_path / "journal.jsonl")
+        s = PoolServer(capacity=4, journal_path=jp)
+        self._fill(s, 7)
+        s.close()
+        s2 = PoolServer(capacity=4, journal_path=jp, resume=True)
+        st = s2.stats()
+        assert st["size"] == 4 and st["puts"] == 7 and st["best_fitness"] == 6.0
+        assert sorted(e.seq for e in s2._entries) == [3, 4, 5, 6]
+        assert s2._seq == 7
+        g, f = s2.get_best()
+        assert f == 6.0 and g.dtype == np.int8
+
+    def test_exactly_once_across_restart(self, tmp_path):
+        jp = str(tmp_path / "journal.jsonl")
+        s = PoolServer(capacity=8, journal_path=jp)
+        self._fill(s, 6)
+        got1, cur1, drop1 = s.get_since(-1, cursor_id="bridge")
+        assert [e.seq for e in got1] == [0, 1, 2, 3, 4, 5] and drop1 == 0
+        s.close()
+        s2 = PoolServer(capacity=8, journal_path=jp, resume=True)
+        self._fill(s2, 3)           # seqs 6, 7, 8
+        # consumer lost its own cursor: seq=-1 + the stored server cursor
+        got2, cur2, drop2 = s2.get_since(-1, cursor_id="bridge")
+        assert [e.seq for e in got2] == [6, 7, 8]
+        assert not set(e.seq for e in got1) & set(e.seq for e in got2)
+
+    def test_dropped_accounting_survives_restart(self, tmp_path):
+        jp = str(tmp_path / "journal.jsonl")
+        s = PoolServer(capacity=4, journal_path=jp)
+        self._fill(s, 10)            # seqs 0..9; 0..5 ring-evicted
+        s.close()
+        s2 = PoolServer(capacity=4, journal_path=jp, resume=True)
+        got, cur, dropped = s2.get_since(-1, cursor_id="c")
+        assert [e.seq for e in got] == [6, 7, 8, 9]
+        assert dropped == 6 and cur == 9
+
+    def test_torn_final_line_tolerated(self, tmp_path):
+        jp = str(tmp_path / "journal.jsonl")
+        s = PoolServer(capacity=4, journal_path=jp)
+        self._fill(s, 5)
+        s.close()
+        with open(jp, "a") as f:
+            f.write('{"op": "put", "uuid": 3, "fit')     # kill -9 mid-write
+        s2 = PoolServer(capacity=4, journal_path=jp, resume=True)
+        assert s2.stats()["puts"] == 5 and s2._seq == 5
+        # and the journal keeps appending cleanly after the torn tail
+        s2.put(np.zeros(6, np.int8), 99.0)
+        s2.close()
+        s3 = PoolServer(capacity=4, journal_path=jp, resume=True)
+        assert s3.stats()["best_fitness"] == 99.0
+
+    def test_unterminated_final_record_is_healed(self, tmp_path):
+        jp = str(tmp_path / "journal.jsonl")
+        s = PoolServer(capacity=4, journal_path=jp)
+        self._fill(s, 3)
+        s.close()
+        with open(jp, "rb") as f:
+            data = f.read()
+        with open(jp, "wb") as f:       # kill landed between data and \n
+            f.write(data.rstrip(b"\n"))
+        s2 = PoolServer(capacity=4, journal_path=jp, resume=True)
+        assert s2.stats()["puts"] == 3  # the record itself is complete
+        s2.put(np.zeros(6, np.int8), 7.0)
+        s2.close()
+        s3 = PoolServer(capacity=4, journal_path=jp, resume=True)
+        assert s3.stats()["puts"] == 4 and s3.stats()["best_fitness"] == 7.0
+
+    def test_replay_reproduces_acceptance_decisions(self, tmp_path):
+        jp = str(tmp_path / "journal.jsonl")
+        acc = AcceptanceConfig(policy="elitist")
+        s = PoolServer(capacity=3, journal_path=jp, acceptance=acc)
+        for f in (5.0, 1.0, 3.0, 2.0, 4.0):
+            s.put(np.full(4, int(f), np.int8), f)
+        fits = sorted(e.fitness for e in s._entries)
+        s.close()
+        # replay does NOT re-run the policy — it applies journaled slots
+        s2 = PoolServer(capacity=3, journal_path=jp, acceptance=acc,
+                        resume=True)
+        assert sorted(e.fitness for e in s2._entries) == fits
+        assert s2.stats()["rejected"] == s.stats()["rejected"]
+
+    def test_reset_replay(self, tmp_path):
+        jp = str(tmp_path / "journal.jsonl")
+        s = PoolServer(capacity=4, journal_path=jp)
+        self._fill(s, 3)
+        s.reset()
+        s.put(np.ones(6, np.int8), 42.0)
+        s.close()
+        s2 = PoolServer(capacity=4, journal_path=jp, resume=True)
+        assert s2.stats()["experiment"] == 1
+        assert s2.stats()["size"] == 1 and s2.stats()["best_fitness"] == 42.0
+
+    def test_bridge_cursor_survives_bridge_restart(self, tmp_path):
+        from repro.core.async_migration import AsyncHostBridge
+        jp = str(tmp_path / "journal.jsonl")
+        server = PoolServer(capacity=16, journal_path=jp)
+        for i in range(5):
+            server.put(np.full(24, 1, np.int8), float(i), uuid=7)
+        pool = pool_lib.pool_init(8, PROBLEM.genome)
+        b1 = AsyncHostBridge(server, pull=64, cursor_id="pod")
+        pool = b1.flush(b1.sync(pool))
+        assert b1.pulled == 5
+        # the bridge dies and comes back with no local position; the
+        # server-side named cursor prevents any re-delivery
+        b2 = AsyncHostBridge(server, pull=64, cursor_id="pod")
+        pool = b2.flush(b2.sync(pool))
+        assert b2.pulled == 0 and b2.dropped == 0
+
+    def test_no_resume_keeps_legacy_append_behaviour(self, tmp_path):
+        jp = str(tmp_path / "journal.jsonl")
+        s = PoolServer(capacity=4, journal_path=jp)
+        self._fill(s, 3)
+        s.close()
+        s2 = PoolServer(capacity=4, journal_path=jp)   # resume not requested
+        assert s2.stats()["size"] == 0 and s2._seq == 0
+
+
+class TestCheckpointerRegressions:
+    def test_wait_drains_errors(self, tmp_path):
+        blocker = tmp_path / "dir_is_a_file"
+        blocker.write_text("not a directory")
+        ck = Checkpointer(str(blocker / "sub"))
+        ck.save_async(1, {"x": jnp.zeros(2)})
+        with pytest.raises(OSError):
+            ck.wait()
+        # the stale error must not re-raise forever
+        ck.wait()
+        ck.directory = str(tmp_path / "ok")
+        ck.save_async(2, {"x": jnp.zeros(2)})
+        ck.wait()
+        assert latest_step(ck.directory) == 2
+
+    def test_save_async_prunes_finished_threads(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        ck.save_async(1, {"x": jnp.zeros(2)})
+        ck.wait()
+        deadline = time.time() + 5
+        while any(t.is_alive() for t in ck._pending) and time.time() < deadline:
+            time.sleep(0.01)
+        ck.save_async(2, {"x": jnp.zeros(2)})
+        assert len(ck._pending) == 1       # finished writers were pruned
+        ck.wait()
+
+    def test_stale_tmp_swept_on_init_and_ignored_by_latest(self, tmp_path):
+        save(str(tmp_path), 3, {"x": jnp.zeros(2)})
+        stale = tmp_path / "step_00000007.tmp"
+        stale.mkdir()
+        (stale / "leaf_00000.npy").write_bytes(b"partial")
+        assert latest_step(str(tmp_path)) == 3   # .tmp is never a candidate
+        Checkpointer(str(tmp_path))
+        assert not stale.exists()                # swept at process start
+        assert latest_step(str(tmp_path)) == 3
+
+    def test_sweep_tmp_reports_removals(self, tmp_path):
+        (tmp_path / "step_00000001.tmp").mkdir()
+        (tmp_path / "step_00000002").mkdir()
+        removed = sweep_tmp(str(tmp_path))
+        assert len(removed) == 1 and removed[0].endswith(".tmp")
+        assert (tmp_path / "step_00000002").exists()
+
+
+class TestRestoreValidation:
+    def test_structure_mismatch(self, tmp_path):
+        save(str(tmp_path), 1, {"a": jnp.zeros(2)})
+        with pytest.raises(ValueError, match="mismatch"):
+            restore(str(tmp_path), target={"b": jnp.zeros(2)})
+
+    def test_truncated_leaf_detected(self, tmp_path):
+        save(str(tmp_path), 1, {"a": jnp.arange(64.0)})
+        step = tmp_path / "step_00000001"
+        leaf = next(p for p in os.listdir(step) if p.startswith("leaf_"))
+        data = (step / leaf).read_bytes()
+        (step / leaf).write_bytes(data[: len(data) // 2])
+        with pytest.raises(Exception):
+            restore(str(tmp_path), target={"a": jnp.zeros(64)})
+
+    def test_missing_manifest_dir_is_not_a_candidate(self, tmp_path):
+        save(str(tmp_path), 1, {"a": jnp.zeros(2)})
+        bad = tmp_path / "step_00000009"
+        bad.mkdir()                      # a dir with no manifest.json
+        assert latest_step(str(tmp_path)) == 1
+        got = restore(str(tmp_path), target={"a": jnp.zeros(2)})
+        assert np.asarray(got["a"]).shape == (2,)
+
+    def test_restore_ignores_target_leaf_shapes(self, tmp_path):
+        # the property elastic resume relies on: structure-only matching
+        save(str(tmp_path), 1, {"a": jnp.zeros((8, 3))})
+        got = restore(str(tmp_path), target={"a": jnp.zeros((16, 3))})
+        assert np.asarray(got["a"]).shape == (8, 3)
+
+
+class TestRetryJitter:
+    def _delays(self, rng):
+        seen = []
+        calls = {"n": 0}
+
+        def boom():
+            calls["n"] += 1
+            raise RuntimeError("nope")
+
+        with pytest.raises(RuntimeError):
+            retry(boom, retries=3, base_delay=0.01, sleep=seen.append,
+                  rng=rng)
+        assert calls["n"] == 4
+        return seen
+
+    def test_seeded_rng_is_deterministic(self):
+        a = self._delays(random.Random(7))
+        b = self._delays(random.Random(7))
+        assert a == b and len(a) == 3
+
+    def test_does_not_touch_global_random(self):
+        random.seed(123)
+        state = random.getstate()
+        self._delays(random.Random(1))
+        self._delays(None)   # rng=None draws from the module-private stream
+        assert random.getstate() == state
+
+
+class TestSnapshotCoverageMeta:
+    """Static pin: every fused-driver scan-carry element has an
+    ExperimentState home (the snapshot is sufficient by construction)."""
+
+    def _project(self):
+        from repro.analysis.engine import collect_python_files
+        from repro.analysis.symbols import load_project
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        return load_project(collect_python_files(
+            [os.path.join(root, "src", "repro", "core")], root=root))
+
+    def test_carries_are_covered(self):
+        from repro.analysis import snapshot
+        assert snapshot.check_coverage(self._project()) == []
+
+    def test_extraction_matches_runtime(self):
+        from repro.analysis import snapshot
+        carries = snapshot.scan_carry_names(self._project())
+        assert carries["repro.core.evolution.fused_scan"] == \
+            ["islands", "pool", "key", "epoch", "stopped"]
+        assert carries["repro.core.async_migration.fused_scan_async"] == \
+            ["islands", "pool", "astate", "key", "tick", "stopped"]
+        fields = snapshot.experiment_state_fields(self._project())
+        assert fields == list(ExperimentState._fields)
+
+    def test_coverage_check_catches_an_escaped_carry(self):
+        # break the tick->epoch alias: the async carry element 'tick' then
+        # has no ExperimentState home and must be reported
+        from repro.analysis import snapshot
+        project = self._project()
+        old = snapshot.CARRY_ALIASES
+        try:
+            snapshot.CARRY_ALIASES = {}
+            problems = snapshot.check_coverage(project)
+            assert any("tick" in p and "escape" in p for p in problems)
+        finally:
+            snapshot.CARRY_ALIASES = old
+
+
+class TestEmptyStatsTemplate:
+    def test_dtypes_match_collect_stats(self):
+        from repro.core.evolution import collect_stats
+        islands = island_lib.init_islands(jax.random.key(0), 2, PROBLEM, CFG)
+        live = jax.tree.map(np.asarray, collect_stats(islands, 1))
+        tmpl = empty_stats()
+        for a, b in zip(jax.tree.leaves(tmpl), jax.tree.leaves(live)):
+            assert a.dtype == np.asarray(b).dtype
