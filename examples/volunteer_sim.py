@@ -4,6 +4,9 @@ paper's fault-tolerance story made executable.
     PYTHONPATH=src python examples/volunteer_sim.py              # sync demo
     PYTHONPATH=src python examples/volunteer_sim.py --runtime async \
         --min-rate 0.25 --max-rate 1.0 --staleness 3 --churn 0.4
+    PYTHONPATH=src python examples/volunteer_sim.py --runtime async \
+        --server http://127.0.0.1:8040          # join a networked service
+                                                # (python -m repro.server)
 
 Sync timeline (the PR-1 demo, epoch-lockstep migration):
   epoch  3: the pool server DIES          (islands keep evolving standalone)
@@ -64,8 +67,9 @@ from repro.core import async_migration, evolution, island as island_lib, \
 from repro.runtime import StragglerMonitor, grow_islands, shrink_islands
 
 
-def make_volunteers(server, problem, n=2):
-    volunteers = [PoolClient(server, uuid=100 + i) for i in range(n)]
+def make_volunteers(server, problem, n=2, clients=None):
+    volunteers = (clients if clients is not None
+                  else [PoolClient(server, uuid=100 + i) for i in range(n)])
     vol_rng = np.random.default_rng(7)
 
     def volunteer_round():
@@ -181,10 +185,30 @@ def run_async(args):
     print(f"churn windows (down..rejoin): {down or 'none'}")
 
     # the server mirrors the device acceptance policy (numpy host_accept)
-    server = PoolServer(capacity=256, seed=1,
-                        acceptance=acc if acc.policy != "always" else None)
-    volunteers, volunteer_round = make_volunteers(server, problem)
-    bridge = AsyncHostBridge(server, pull=4, acceptance=acc)
+    if args.server:
+        # networked mode: every participant speaks the JSON wire protocol
+        # to a running `python -m repro.server` service; each volunteer
+        # gets its own keep-alive connection (its own browser tab)
+        from repro.server import RemotePoolServer
+        ensure = RemotePoolServer(args.server, experiment=args.experiment,
+                                  client_id="volunteer-sim")
+        ensure.create(capacity=256, seed=1,
+                      acceptance=acc.policy, epsilon=acc.epsilon)
+        server = ensure
+        clients = [PoolClient(
+            RemotePoolServer(args.server, experiment=args.experiment,
+                             client_id=f"volunteer-{i}"), uuid=100 + i)
+            for i in range(2)]
+        volunteers, volunteer_round = make_volunteers(
+            server, problem, clients=clients)
+        bridge = AsyncHostBridge(args.server, pull=4, acceptance=acc,
+                                 experiment=args.experiment,
+                                 cursor_id="volunteer-sim-bridge")
+    else:
+        server = PoolServer(capacity=256, seed=1,
+                            acceptance=acc if acc.policy != "always" else None)
+        volunteers, volunteer_round = make_volunteers(server, problem)
+        bridge = AsyncHostBridge(server, pull=4, acceptance=acc)
 
     step = jax.jit(partial(async_migration.async_step, problem=problem,
                            cfg=cfg, mig=mig, acfg=acfg, w2=False))
@@ -224,7 +248,15 @@ def main():
     ap.add_argument("--acceptance-epsilon", type=float, default=0.0)
     ap.add_argument("--ticks", type=int, default=20)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--server", default=None, metavar="URL",
+                    help="async mode only: join a networked "
+                         "`python -m repro.server` service at URL over the "
+                         "JSON wire protocol instead of an in-process pool")
+    ap.add_argument("--experiment", default="volunteer-sim",
+                    help="experiment namespace on the networked server")
     args = ap.parse_args()
+    if args.server and args.runtime != "async":
+        ap.error("--server requires --runtime async")
     if args.runtime == "async":
         run_async(args)
     else:

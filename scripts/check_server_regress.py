@@ -1,0 +1,106 @@
+#!/usr/bin/env python
+"""Server-load regression gate: fail CI if the fresh server smoke lost
+>30% requests/sec against the committed BENCH_server.json on a
+comparable host.
+
+Rows are matched on (scenario, clients, workers, shards) and only
+compared when baseline and fresh were measured with the same cpu_count —
+wire throughput on this repo's 1-core container and on a multi-core CI
+runner are different universes, and a cross-host comparison would gate
+on hardware, not on code. Unmatched rows are reported but never fail, so
+adding scenarios doesn't require regenerating the baseline first.
+
+The exactly-once ledger is NOT host-dependent and is always enforced:
+any fresh row with duplicates, a non-balancing cursor ledger, or
+``dropped != 0`` fails the gate regardless of host.
+
+Usage:
+    python scripts/check_server_regress.py \
+        --baseline BENCH_server.json --fresh /tmp/fresh_server.json \
+        [--threshold 0.30]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, Tuple
+
+
+def _key(row: Dict[str, Any]) -> Tuple:
+    return (row["scenario"], row["clients"], row["workers"], row["shards"])
+
+
+def _env(payload: Dict[str, Any]) -> Tuple:
+    return (payload.get("host", {}).get("cpu_count"),)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--baseline", default="BENCH_server.json")
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--threshold", type=float, default=0.30,
+                    help="max allowed fractional requests/sec drop "
+                         "(0.30 = fail below 70%% of baseline)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as fh:
+        base = json.load(fh)
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+
+    failures = []
+    # correctness gate first: host-independent, never skipped
+    for row in fresh.get("rows", []):
+        problems = []
+        if not row.get("exactly_once_ok", False):
+            problems.append("ledger does not balance")
+        if row.get("duplicates", 0):
+            problems.append(f"{row['duplicates']} duplicate (shard,seq)")
+        if row.get("dropped", 0):
+            problems.append(f"{row['dropped']} entries dropped")
+        if problems:
+            print(f"server gate: {_key(row)}: EXACTLY-ONCE BROKEN — "
+                  f"{'; '.join(problems)}")
+            failures.append(_key(row))
+        else:
+            print(f"server gate: {_key(row)}: exactly-once OK "
+                  f"(delivered {row.get('delivered')}, dropped 0)")
+
+    if _env(base) != _env(fresh):
+        print(f"server gate: throughput SKIP — baseline cpu_count "
+              f"{_env(base)} != fresh {_env(fresh)} (cross-host wire "
+              f"throughput is not comparable)")
+        return 1 if failures else 0
+
+    base_rows = {_key(r): r for r in base.get("rows", [])}
+    compared = 0
+    for row in fresh.get("rows", []):
+        ref = base_rows.get(_key(row))
+        if ref is None:
+            print(f"server gate: new row (no baseline): {_key(row)}")
+            continue
+        compared += 1
+        floor = ref["requests_per_sec"] * (1.0 - args.threshold)
+        status = ("OK" if row["requests_per_sec"] >= floor else "REGRESSED")
+        print(f"server gate: {row['scenario']:>10s} "
+              f"{row['clients']:>6d} clients: "
+              f"{row['requests_per_sec']:>8.0f} req/s vs baseline "
+              f"{ref['requests_per_sec']:>8.0f} (floor {floor:>8.0f}) "
+              f"{status}")
+        if status == "REGRESSED":
+            failures.append(_key(row))
+
+    if failures:
+        print(f"server gate: FAIL — {len(failures)} row(s): {failures}")
+        return 1
+    if not compared:
+        print("server gate: throughput SKIP — no comparable rows")
+        return 0
+    print(f"server gate: OK — {compared} row(s) within "
+          f"{args.threshold:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

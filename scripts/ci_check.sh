@@ -22,6 +22,10 @@
 #     section, two scenarios in smoke trim.
 # Both carry "host" + "host.env" blocks (jax version/backend/device,
 # XLA_FLAGS, interpret mode, autotune cache) so numbers are attributable.
+# A third committed artifact, BENCH_server.json (networked pool service
+# load harness), is gated by scripts/check_server_regress.py from a
+# 500-volunteer smoke; its 10k-volunteer headline row is refreshed only
+# by explicit `python benchmarks/server_load.py --full` runs.
 # BENCH_speed.json is a *committed* artifact: the fresh smoke is written
 # to a temp file and gated against the committed baseline (>30% evals/sec
 # regression on the same backend fails) before replacing it locally.
@@ -87,6 +91,21 @@ PY
 
 echo "== kill -9 + resume smoke (segmented drivers + journaled PoolServer) =="
 python scripts/kill_resume_smoke.py
+
+echo "== server load smoke (500 volunteers over the wire) + regression gate =="
+# BENCH_server.json is a *committed* artifact whose headline row (10k
+# volunteers) only a deliberate `benchmarks/server_load.py --full` run can
+# regenerate — so unlike the speed flow, the fresh smoke is gated and then
+# DISCARDED, never promoted over the baseline.
+FRESH_SERVER="$(mktemp /tmp/bench_server_fresh.XXXXXX.json)"
+python benchmarks/server_load.py --scenario smoke --json "$FRESH_SERVER"
+if [[ -f BENCH_server.json ]]; then
+    python scripts/check_server_regress.py --baseline BENCH_server.json \
+        --fresh "$FRESH_SERVER" --threshold 0.30
+else
+    echo "no committed BENCH_server.json — first run, gate skipped"
+fi
+rm -f "$FRESH_SERVER"
 
 echo "== Fig 4 smoke (tiled generation engine end-to-end) =="
 python -m benchmarks.fig4_f15 --smoke

@@ -17,6 +17,13 @@ Three legs, all against real processes (not in-process simulations):
    seq the cursor passed.
 3. **Elastic resume.** Resume leg 1's checkpoint at double the island
    count and assert the run completes.
+4. **Networked service kill/restart under load.** SIGKILL a
+   ``python -m repro.server`` subprocess while a burst of wire PUTs is
+   in flight (torn WAL tails across two shards), restart it with
+   ``--resume``, and assert the rehydrated service answers with the same
+   accepted entries and that a wire ``get_since`` under a named cursor
+   never re-delivers a ``(shard, seq)`` across restarts — the leg-2
+   contract, now across a process boundary and the HTTP frontend.
 
 Run from the repo root:  python scripts/kill_resume_smoke.py
 """
@@ -160,12 +167,110 @@ def leg3_elastic_resume(snap_dir: str) -> None:
     print(f"leg3 OK (4-island checkpoint resumed as 8): {out}")
 
 
+def _spawn_service(spool: str, port: int = 0) -> tuple:
+    """Start `python -m repro.server --resume` on an ephemeral port;
+    returns (proc, url)."""
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.server", "--port", str(port),
+         "--spool", spool, "--resume", "--shards", "2",
+         "--capacity", "64"],
+        env=ENV, cwd=ROOT, stdout=subprocess.PIPE, text=True)
+    line = proc.stdout.readline()
+    if "listening on" not in line:
+        proc.kill()
+        raise SystemExit(f"service failed to start: {line!r}")
+    return proc, line.rsplit(" ", 1)[-1].strip()
+
+
+def leg4_service_kill_restart(spool: str) -> None:
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    import threading
+
+    import numpy as np
+    from repro.core.async_pool import PoolUnavailable
+    from repro.server.client import RemotePoolServer
+
+    proc, url = _spawn_service(spool)
+    putter_lost = []
+
+    def put_burst(n=10_000):
+        c = RemotePoolServer(url, experiment="smoke4", client_id="burst")
+        for i in range(n):
+            try:
+                c.put(np.full(8, i % 127, np.int8), float(i), uuid=i % 7)
+            except PoolUnavailable:
+                putter_lost.append(i)   # the kill landed mid-burst
+                return
+
+    burst = threading.Thread(target=put_burst, daemon=True)
+    burst.start()
+
+    # drain exactly-once while the burst is running, then kill mid-flight
+    drain = RemotePoolServer(url, experiment="smoke4", client_id="drain")
+    cursor, seen, pre_dropped = -1, set(), 0
+    t0 = time.time()
+    while time.time() - t0 < 120:
+        entries, cursor, d = drain.get_since(cursor, limit=64,
+                                             cursor_id="smoke4")
+        pre_dropped += d
+        for e in entries:
+            key = (e.shard, e.seq)
+            assert key not in seen, f"duplicate {key} before restart"
+            seen.add(key)
+        if len(seen) >= 100:
+            break
+        time.sleep(0.01)
+    assert len(seen) >= 100, f"burst too slow: {len(seen)} drained"
+    proc.send_signal(signal.SIGKILL)
+    proc.wait()
+    proc.stdout.close()
+    burst.join(timeout=60)
+    print(f"leg4: service SIGKILLed mid-burst "
+          f"({len(seen)} drained, torn WAL tails possible)")
+
+    # restart with --resume: WAL rehydration across both shards, then the
+    # same named cursor must pick up where it left off — a drain that
+    # lost its own position (seq=-1) still never re-sees a (shard, seq)
+    proc2, url2 = _spawn_service(spool)
+    try:
+        drain2 = RemotePoolServer(url2, experiment="smoke4",
+                                  client_id="drain")
+        st = drain2.stats()
+        assert st["shards"] == 2 and st["puts"] >= 100, st
+        assert st["size"] >= 1, "rehydrated service lost the pool"
+        got, cur2, dropped2 = drain2.get_since(-1, limit=10_000,
+                                               cursor_id="smoke4")
+        dup = {(e.shard, e.seq) for e in got} & seen
+        assert not dup, (f"exactly-once violated across service restart: "
+                         f"{sorted(dup)[:5]}")
+        covered = sum(c + 1 for c in cur2)
+        # the full ledger: everything the cursor passed is either in a
+        # drain or counted dropped (ring eviction outpacing the drain)
+        total_dropped = pre_dropped + dropped2
+        assert covered == len(seen) + len(got) + total_dropped, (
+            f"cursor ledger leaks: covered={covered} "
+            f"pre={len(seen)} post={len(got)} dropped={total_dropped}")
+        drain2.close()
+    finally:
+        proc2.send_signal(signal.SIGTERM)
+        try:
+            proc2.wait(timeout=15)
+        except subprocess.TimeoutExpired:
+            proc2.kill()
+            proc2.wait()
+        proc2.stdout.close()
+    print(f"leg4 OK: resume rehydrated {st['puts']} puts across "
+          f"{st['shards']} shards; post-restart drain {len(got)} "
+          f"dropped {total_dropped}, no (shard, seq) seen twice")
+
+
 def main() -> None:
     with tempfile.TemporaryDirectory() as tmp:
         snap_dir = os.path.join(tmp, "snaps")
         leg1_driver_kill_resume(snap_dir)
         leg2_server_kill_restart(os.path.join(tmp, "pool.jsonl"))
         leg3_elastic_resume(snap_dir)
+        leg4_service_kill_restart(os.path.join(tmp, "spool"))
     print("kill_resume_smoke: all legs passed")
 
 

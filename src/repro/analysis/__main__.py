@@ -5,9 +5,10 @@ active finding (or parse error, or reasonless pragma) remains, 2 on bad
 invocation.  ``--format github`` emits ``::error`` workflow commands.
 
 ``--selfcheck`` writes known-bad snippets (a key-reuse RNG violation and
-an unlocked read of locked state) to a scratch directory, runs the
-analyzer over them, and exits 0 only if both are caught — CI runs it so
-a silently broken analyzer cannot green-light the tree.
+unlocked reads of locked state, one per lock flavor: threading/LCK01 and
+asyncio/LCK02) to a scratch directory, runs the analyzer over them, and
+exits 0 only if all are caught — CI runs it so a silently broken
+analyzer cannot green-light the tree.
 """
 from __future__ import annotations
 
@@ -47,8 +48,25 @@ SELFCHECK_SNIPPETS = {
         "    def is_up(self):\n"
         "        return self._up\n"
     ),
+    "bad_async_lock.py": (
+        "import asyncio\n"
+        "\n"
+        "\n"
+        "class Registry:\n"
+        "    def __init__(self):\n"
+        "        self._lock = asyncio.Lock()\n"
+        "        self._count = 0\n"
+        "\n"
+        "    async def add(self):\n"
+        "        async with self._lock:\n"
+        "            self._count = self._count + 1\n"
+        "\n"
+        "    async def snapshot(self):\n"
+        "        return self._count\n"
+    ),
 }
-SELFCHECK_EXPECT = {"bad_rng.py": "RNG01", "bad_lock.py": "LCK01"}
+SELFCHECK_EXPECT = {"bad_rng.py": "RNG01", "bad_lock.py": "LCK01",
+                    "bad_async_lock.py": "LCK02"}
 
 
 def _selfcheck() -> int:

@@ -1,17 +1,31 @@
-"""Pass 2 — lock discipline (LCK01): the mechanized PR-3 TOCTOU check.
+"""Pass 2 — lock discipline (LCK01 threads, LCK02 asyncio): the
+mechanized PR-3 TOCTOU check, in both concurrency flavors.
 
-For every class that owns a ``threading.Lock``/``RLock`` attribute
-(``self._lock = threading.Lock()`` in ``__init__``), collect the set of
-instance attributes that are ever *written* inside a ``with self._lock:``
-block in any method.  Those attributes form the class's locked state;
-any read or write of them lexically outside a lock block (in any method
-other than ``__init__``, which happens-before publication) is flagged.
+LCK01: for every class that owns a ``threading.Lock``/``RLock``
+attribute (``self._lock = threading.Lock()`` in ``__init__``), collect
+the set of instance attributes that are ever *written* inside a
+``with self._lock:`` block in any method.  Those attributes form the
+class's locked state; any read or write of them lexically outside a lock
+block (in any method other than ``__init__``, which happens-before
+publication) is flagged.
 
 This is exactly the bug class PR 3 paid to find by test: a liveness /
 counter / cursor read outside the lock racing a locked writer
-(``kill()``/``revive()`` vs an unlocked ``up`` pre-check).  Helper
-methods that are only ever called with the lock held are legitimate —
-mark them with ``# repro-lint: disable=LCK01 -- <why>`` at the access.
+(``kill()``/``revive()`` vs an unlocked ``up`` pre-check).
+
+LCK02 is the same contract for ``asyncio.Lock``/``Condition``/
+``Semaphore``/``BoundedSemaphore`` attributes guarded by ``async with``:
+once a class elects to guard state with an asyncio lock, touching that
+state on a path that does not hold it races across the await points
+inside other holders' critical sections.  Note what LCK02 deliberately
+does NOT flag: loop-owned state mutated only in await-free sections and
+never written under the lock (the single-writer event-loop ownership
+pattern — atomic under cooperative scheduling; see docs/invariants.md).
+Only attributes the class itself puts under the lock join the contract.
+
+Helper methods that are only ever called with the lock held are
+legitimate — mark them with ``# repro-lint: disable=LCK01 -- <why>``
+(or ``LCK02``) at the access.
 """
 from __future__ import annotations
 
@@ -21,25 +35,41 @@ from typing import Dict, List, Set, Tuple
 from ..findings import Finding
 from ..symbols import ModuleInfo, Project
 
-LOCK_TYPES = {"Lock", "RLock", "Condition"}
+THREAD_LOCK_TYPES = {"Lock", "RLock", "Condition"}
+ASYNC_LOCK_TYPES = {"Lock", "Condition", "Semaphore", "BoundedSemaphore"}
+
+#: flavor -> (finding code, human label)
+_FLAVORS = {
+    "thread": ("LCK01", "with self.<lock>"),
+    "async": ("LCK02", "async with self.<lock>"),
+}
 
 
-def _lock_attrs(cls: ast.ClassDef, module: ModuleInfo) -> Set[str]:
-    """Attribute names assigned from threading.Lock()/RLock() anywhere in
-    the class body (usually __init__)."""
-    out: Set[str] = set()
+def _lock_attrs(cls: ast.ClassDef, module: ModuleInfo) -> Dict[str, str]:
+    """``{attr: flavor}`` for attributes assigned from
+    threading.Lock()/RLock() ('thread') or asyncio.Lock()/Semaphore()/...
+    ('async') anywhere in the class body (usually __init__).  A bare
+    ``Lock()`` (from-imported) counts as a thread lock — the historical
+    reading, and asyncio code conventionally keeps the module prefix."""
+    out: Dict[str, str] = {}
     for node in ast.walk(cls):
         if not isinstance(node, ast.Assign) or not isinstance(
                 node.value, ast.Call):
             continue
         name = module.call_name(node.value) or ""
         parts = name.split(".")
-        if parts[-1] in LOCK_TYPES and (len(parts) == 1
-                                        or parts[0] == "threading"):
-            for t in node.targets:
-                if isinstance(t, ast.Attribute) and isinstance(
-                        t.value, ast.Name) and t.value.id == "self":
-                    out.add(t.attr)
+        flavor = None
+        if parts[0] == "asyncio" and parts[-1] in ASYNC_LOCK_TYPES:
+            flavor = "async"
+        elif parts[-1] in THREAD_LOCK_TYPES and (len(parts) == 1
+                                                 or parts[0] == "threading"):
+            flavor = "thread"
+        if flavor is None:
+            continue
+        for t in node.targets:
+            if isinstance(t, ast.Attribute) and isinstance(
+                    t.value, ast.Name) and t.value.id == "self":
+                out[t.attr] = flavor
     return out
 
 
@@ -52,42 +82,51 @@ def _self_attr(node: ast.AST) -> str:
 
 
 class _MethodScan(ast.NodeVisitor):
-    """Record self-attribute accesses split by lock-held status."""
+    """Record self-attribute accesses split by held-lock flavor."""
 
-    def __init__(self, lock_attrs: Set[str]):
+    def __init__(self, lock_attrs: Dict[str, str]):
         self.lock_attrs = lock_attrs
-        self.depth = 0
-        # attr -> [(line, inside_lock, is_write)]
-        self.accesses: List[Tuple[str, int, bool, bool]] = []
+        self.depth = {"thread": 0, "async": 0}
+        # (attr, line, held_flavors, is_write)
+        self.accesses: List[Tuple[str, int, frozenset, bool]] = []
 
-    def _is_lock_ctx(self, expr: ast.AST) -> bool:
-        a = _self_attr(expr)
-        if a in self.lock_attrs:
-            return True
-        # self._lock.acquire()-style guards are not `with` blocks; only
-        # `with self._lock:` (optionally aliased) counts as held here.
-        return False
+    def _held_flavor(self, node, is_async: bool) -> str:
+        """Flavor of the lock this with-statement holds, or ''.
+        ``with self._tlock:`` holds a thread lock; ``async with
+        self._alock:`` holds an asyncio lock. A mismatched pairing is a
+        runtime bug on its own — not silently blessed as held here.
+        self._lock.acquire()-style guards are not `with` blocks; only
+        the context-manager form (optionally aliased) counts."""
+        want = "async" if is_async else "thread"
+        for item in node.items:
+            a = _self_attr(item.context_expr)
+            if a and self.lock_attrs.get(a) == want:
+                return want
+        return ""
 
-    def visit_With(self, node: ast.With) -> None:
-        held = any(self._is_lock_ctx(item.context_expr)
-                   for item in node.items)
+    def _visit_with(self, node, is_async: bool) -> None:
+        held = self._held_flavor(node, is_async)
         for item in node.items:
             self.visit(item.context_expr)
         if held:
-            self.depth += 1
+            self.depth[held] += 1
         for st in node.body:
             self.visit(st)
         if held:
-            self.depth -= 1
+            self.depth[held] -= 1
 
-    visit_AsyncWith = visit_With
+    def visit_With(self, node: ast.With) -> None:
+        self._visit_with(node, is_async=False)
+
+    def visit_AsyncWith(self, node: ast.AsyncWith) -> None:
+        self._visit_with(node, is_async=True)
 
     def visit_Attribute(self, node: ast.Attribute) -> None:
         attr = _self_attr(node)
         if attr and attr not in self.lock_attrs:
             is_write = isinstance(node.ctx, (ast.Store, ast.Del))
-            self.accesses.append(
-                (attr, node.lineno, self.depth > 0, is_write))
+            held = frozenset(f for f, d in self.depth.items() if d > 0)
+            self.accesses.append((attr, node.lineno, held, is_write))
         self.generic_visit(node)
 
     def visit_FunctionDef(self, node):  # nested defs: new method context,
@@ -118,30 +157,34 @@ def _scan_class(module: ModuleInfo, cls: ast.ClassDef) -> List[Finding]:
                         subscan.visit(st)
                     per_method[f"{node.name}.<locals>.{sub.name}"] = subscan
 
-    # locked state = attrs ever written while holding the lock
-    locked_state: Set[str] = set()
+    # per flavor: locked state = attrs ever written while holding a lock
+    # of that flavor
+    locked_state: Dict[str, Set[str]] = {f: set() for f in _FLAVORS}
     for name, scan in per_method.items():
         if name.split(".")[0] in ("__init__", "__new__"):
             continue
-        for attr, _, inside, is_write in scan.accesses:
-            if inside and is_write:
-                locked_state.add(attr)
-    if not locked_state:
-        return []
+        for attr, _, held, is_write in scan.accesses:
+            if is_write:
+                for flavor in held:
+                    locked_state[flavor].add(attr)
 
     findings: List[Finding] = []
-    for name, scan in per_method.items():
-        if name.split(".")[0] in ("__init__", "__new__"):
+    for flavor, (code, label) in _FLAVORS.items():
+        state = locked_state[flavor]
+        if not state:
             continue
-        for attr, line, inside, is_write in scan.accesses:
-            if attr in locked_state and not inside:
-                verb = "written" if is_write else "read"
-                findings.append(Finding(
-                    "LCK01", module.relpath, line,
-                    f"{cls.name}.{attr} is written under "
-                    f"`with self.<lock>` elsewhere but {verb} here "
-                    f"without the lock (method {name}) — the PR-3 "
-                    f"TOCTOU class"))
+        for name, scan in per_method.items():
+            if name.split(".")[0] in ("__init__", "__new__"):
+                continue
+            for attr, line, held, is_write in scan.accesses:
+                if attr in state and flavor not in held:
+                    verb = "written" if is_write else "read"
+                    findings.append(Finding(
+                        code, module.relpath, line,
+                        f"{cls.name}.{attr} is written under "
+                        f"`{label}` elsewhere but {verb} here "
+                        f"without the lock (method {name}) — the PR-3 "
+                        f"TOCTOU class"))
     return findings
 
 

@@ -531,14 +531,23 @@ class AsyncHostBridge(migration_lib.HostBridge):
     pool, and a journal-rehydrated server restores the stored cursor on
     replay, so exactly-once holds across both restarts.
 
+    Like the parent, ``server`` may be a URL string — the worker then
+    speaks the JSON wire protocol to a networked service through
+    :class:`~repro.server.client.RemotePoolServer`. The cursor the worker
+    threads through ``get_since`` is opaque (``-1`` cold): in-process it
+    is the server's int sequence, over the wire it is the service's
+    per-shard cursor vector; the exactly-once contract is identical, and
+    the in-process path is bit-for-bit unchanged.
+
     :meth:`flush` blocks until the worker has drained the job queue —
     tests and orderly shutdown only; the driver never needs it.
     """
 
     def __init__(self, server, pull: int = 4, uuid: int = -1,
-                 acceptance=None, cursor_id: Optional[str] = None):
+                 acceptance=None, cursor_id: Optional[str] = None,
+                 experiment: str = "default"):
         super().__init__(server, every=1, pull=pull, uuid=uuid,
-                         acceptance=acceptance)
+                         acceptance=acceptance, experiment=experiment)
         self._jobs: "queue.Queue" = queue.Queue()
         self._fetched: List[Tuple[np.ndarray, float]] = []
         self._flock = threading.Lock()

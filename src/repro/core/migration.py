@@ -404,13 +404,26 @@ class HostBridge:
     server entries (core.acceptance); pair it with a PoolServer built with
     the same :class:`~repro.core.types.AcceptanceConfig` so both sides of
     the bridge make the same replacement decisions.
+
+    ``server`` may also be a URL string (``http://host:port`` or
+    ``host:port``), in which case the bridge talks the JSON wire protocol
+    to a networked ``python -m repro.server`` service via
+    :class:`~repro.server.client.RemotePoolServer` — same verbs, same
+    lost-XHR tolerance, nothing else changes. The in-process path is
+    untouched: a PoolServer instance is used exactly as before.
     """
 
     def __init__(self, server, every: int = 1, pull: int = 4,
                  uuid: int = -1,
-                 acceptance: Optional[AcceptanceConfig] = None):
+                 acceptance: Optional[AcceptanceConfig] = None,
+                 experiment: str = "default"):
         if every < 1:
             raise ValueError("every must be >= 1")
+        if isinstance(server, str):
+            # deferred import: repro.server is an optional tier on top of
+            # core, core must not hard-depend on it
+            from repro.server.client import RemotePoolServer
+            server = RemotePoolServer(server, experiment=experiment)
         self.server = server
         self.every = every
         self.pull = pull

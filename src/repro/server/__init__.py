@@ -1,0 +1,58 @@
+"""repro.server — production multi-experiment pool service.
+
+The networked tier of the paper's NodIO server: an asyncio HTTP/JSON
+frontend speaking the JSON wire protocol of the follow-up paper
+("Asynchronous Distributed GAs with Javascript and JSON",
+arXiv:2401.17234) over per-experiment namespaces, each backed by the
+in-process :class:`~repro.core.async_pool.PoolServer` (WAL journal,
+named ``get_since`` cursors, server-side acceptance registry) and
+sharded behind consistent hashing.
+
+Public API:
+    wire            — verb shapes + JSON (de)serialization (the protocol)
+    PoolService     — transport-independent multi-experiment core
+    ExperimentConfig— per-namespace capacity/shards/acceptance/seed
+    PoolHTTPServer  — asyncio HTTP/1.1 frontend (rate limit+backpressure)
+    background_server — run a frontend on a thread (tests/examples)
+    RemotePoolServer— blocking wire client with the PoolServer verb
+                      surface (drop-in for Host/AsyncHostBridge)
+    AsyncWireClient — asyncio wire client (volunteer load harness)
+
+Attributes resolve lazily (PEP 562): the service side pulls in
+``repro.core`` (and therefore jax), but a pure client — e.g. a load
+harness worker importing only :class:`AsyncWireClient` — must not pay
+that import in every volunteer process.
+
+Start a service from the shell:  python -m repro.server --port 8040
+"""
+_EXPORTS = {
+    "wire": ("repro.server.wire", None),
+    "AsyncWireClient": ("repro.server.client", "AsyncWireClient"),
+    "RemotePoolServer": ("repro.server.client", "RemotePoolServer"),
+    "PoolHTTPServer": ("repro.server.http", "PoolHTTPServer"),
+    "background_server": ("repro.server.http", "background_server"),
+    "RateLimiter": ("repro.server.ratelimit", "RateLimiter"),
+    "TokenBucket": ("repro.server.ratelimit", "TokenBucket"),
+    "ExperimentConfig": ("repro.server.service", "ExperimentConfig"),
+    "HashRing": ("repro.server.service", "HashRing"),
+    "PoolService": ("repro.server.service", "PoolService"),
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    import importlib
+    try:
+        module, attr = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}") from None
+    mod = importlib.import_module(module)
+    value = mod if attr is None else getattr(mod, attr)
+    globals()[name] = value   # cache for the next lookup
+    return value
+
+
+def __dir__():
+    return __all__

@@ -1,0 +1,395 @@
+"""Asyncio HTTP/1.1 frontend for :class:`~repro.server.service.PoolService`.
+
+Pure stdlib (``asyncio.start_server`` + a minimal HTTP parser): the
+container and CI runners need nothing beyond the Python baseline, and
+the server stays a single auditable file.
+
+Concurrency model — single event loop + a small worker pool:
+
+  * Connection handling, parsing, routing, rate limiting and response
+    writing run on the event loop. Frontend state (metrics counters,
+    the queue-depth gauge) is mutated only in plain sections with no
+    ``await`` inside — atomic under cooperative scheduling (the
+    single-writer ownership the LCK02 invariant permits; see
+    docs/invariants.md).
+  * Pool verbs execute on a ThreadPoolExecutor (default 1 worker): the
+    WAL journal write inside :meth:`PoolServer._put` is blocking file
+    I/O, and pushing it off-loop keeps accept/parse latency flat while
+    giving backpressure a real signal — the executor backlog *is* the
+    queue depth.
+  * Experiment creation (journal files open on disk) runs under an
+    ``asyncio.Lock`` so two first-touch requests for the same namespace
+    cannot double-create it across the executor await.
+
+Load shedding: a request is refused with ``429`` + ``Retry-After``
+either when its client's token bucket is dry (per-client rate limit,
+keyed on ``X-Client-Id``) or when ``queue_depth >= max_queue``
+(global backpressure). Clients are expected to back off and retry —
+exactly the paper's lost-XHR discipline.
+"""
+from __future__ import annotations
+
+import asyncio
+import contextlib
+import json
+import re
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+from urllib.parse import parse_qs, urlsplit
+
+from repro.core.async_pool import PoolUnavailable
+
+from . import wire
+from .ratelimit import RateLimiter
+from .service import ExperimentConfig, PoolService
+
+_MAX_LINE = 64 * 1024
+_MAX_BODY = 32 * 1024 * 1024
+
+_STATUS_TEXT = {200: "OK", 400: "Bad Request", 404: "Not Found",
+                405: "Method Not Allowed", 409: "Conflict",
+                413: "Payload Too Large", 429: "Too Many Requests",
+                500: "Internal Server Error", 503: "Service Unavailable"}
+
+_EXP = r"([A-Za-z0-9][A-Za-z0-9_.-]{0,63})"
+_ROUTES = [
+    ("GET", re.compile(r"^/healthz$"), "healthz"),
+    ("GET", re.compile(r"^/metricz$"), "metricz"),
+    ("GET", re.compile(r"^/v1/experiments$"), "list_experiments"),
+    ("POST", re.compile(rf"^/v1/experiment/{_EXP}$"), "create"),
+    ("DELETE", re.compile(rf"^/v1/experiment/{_EXP}$"), "reset"),
+    ("PUT", re.compile(rf"^/v1/experiment/{_EXP}/chromosomes$"), "put"),
+    ("GET", re.compile(rf"^/v1/experiment/{_EXP}/chromosomes/random$"),
+     "get_random"),
+    ("GET", re.compile(rf"^/v1/experiment/{_EXP}/chromosomes/since$"),
+     "get_since"),
+    ("GET", re.compile(rf"^/v1/experiment/{_EXP}/best$"), "best"),
+    ("GET", re.compile(rf"^/v1/experiment/{_EXP}/stats$"), "stats"),
+]
+
+
+class _HTTPError(Exception):
+    def __init__(self, status: int, msg: str):
+        super().__init__(msg)
+        self.status = status
+
+
+def _json_response(status: int, body: Dict[str, Any],
+                   extra_headers: Optional[Dict[str, str]] = None,
+                   keep_alive: bool = True) -> bytes:
+    payload = json.dumps(body, separators=(",", ":")).encode()
+    head = [f"HTTP/1.1 {status} {_STATUS_TEXT.get(status, 'Unknown')}",
+            "Content-Type: application/json",
+            f"Content-Length: {len(payload)}",
+            f"Connection: {'keep-alive' if keep_alive else 'close'}"]
+    for k, v in (extra_headers or {}).items():
+        head.append(f"{k}: {v}")
+    return ("\r\n".join(head) + "\r\n\r\n").encode() + payload
+
+
+async def _read_request(reader: asyncio.StreamReader,
+                        ) -> Optional[Tuple[str, str, Dict[str, str], bytes]]:
+    """One HTTP/1.1 request -> (method, target, headers, body); None on a
+    clean EOF between requests (keep-alive connection closed)."""
+    try:
+        line = await reader.readline()
+    except (asyncio.LimitOverrunError, ValueError):
+        raise _HTTPError(400, "request line too long")
+    if not line:
+        return None
+    parts = line.decode("latin-1").strip().split()
+    if len(parts) != 3:
+        raise _HTTPError(400, "malformed request line")
+    method, target, _version = parts
+    headers: Dict[str, str] = {}
+    total = 0
+    while True:
+        line = await reader.readline()
+        total += len(line)
+        if total > _MAX_LINE:
+            raise _HTTPError(400, "headers too large")
+        if line in (b"\r\n", b"\n", b""):
+            break
+        name, _, value = line.decode("latin-1").partition(":")
+        headers[name.strip().lower()] = value.strip()
+    length = int(headers.get("content-length", "0") or "0")
+    if length > _MAX_BODY:
+        raise _HTTPError(413, f"body exceeds {_MAX_BODY} bytes")
+    body = await reader.readexactly(length) if length else b""
+    return method.upper(), target, headers, body
+
+
+class PoolHTTPServer:
+    """The networked pool frontend. ``await start()`` binds (port 0 =
+    ephemeral; the bound port lands in ``self.port``); ``serve_forever``
+    blocks until :meth:`stop`."""
+
+    def __init__(self, service: PoolService, host: str = "127.0.0.1",
+                 port: int = 0, *, rate: float = 200.0, burst: float = 400.0,
+                 max_queue: int = 512, backlog: int = 4096,
+                 executor_workers: int = 1):
+        self.service = service
+        self.host = host
+        self.port = port
+        self.max_queue = max_queue
+        self._backlog = backlog
+        self._limiter = RateLimiter(rate=rate, burst=burst)
+        self._queue_depth = 0
+        self._metrics: Dict[str, int] = {}
+        self._exp_lock = asyncio.Lock()
+        self._executor = ThreadPoolExecutor(
+            max_workers=executor_workers,
+            thread_name_prefix="pool-verbs")
+        self._server: Optional[asyncio.base_events.Server] = None
+        self._stopped: Optional[asyncio.Event] = None
+        self._conns: set = set()
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def _count(self, key: str, n: int = 1) -> None:
+        self._metrics[key] = self._metrics.get(key, 0) + n
+
+    # -- lifecycle ----------------------------------------------------------
+    async def start(self) -> "PoolHTTPServer":
+        self._stopped = asyncio.Event()
+        self._server = await asyncio.start_server(
+            self._handle, self.host, self.port, backlog=self._backlog,
+            limit=_MAX_LINE)
+        self.port = self._server.sockets[0].getsockname()[1]
+        return self
+
+    async def serve_forever(self) -> None:
+        assert self._server is not None, "call start() first"
+        await self._stopped.wait()
+
+    def stop(self) -> None:
+        """Loop-threadsafe-callable shutdown trigger."""
+        if self._stopped is not None and not self._stopped.is_set():
+            self._stopped.set()
+
+    async def aclose(self) -> None:
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+        # keep-alive connections idle in _read_request outlive the
+        # listener — reap them so the loop can close cleanly
+        for task in list(self._conns):
+            task.cancel()
+        if self._conns:
+            await asyncio.gather(*self._conns, return_exceptions=True)
+        self._executor.shutdown(wait=True)
+        self.service.close()   # journals flushed + closed
+
+    # -- connection loop ----------------------------------------------------
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        peer = writer.get_extra_info("peername") or ("?", 0)
+        task = asyncio.current_task()
+        self._conns.add(task)
+        try:
+            while True:
+                try:
+                    req = await _read_request(reader)
+                except _HTTPError as exc:
+                    writer.write(_json_response(
+                        exc.status, wire.error_body(str(exc)),
+                        keep_alive=False))
+                    await writer.drain()
+                    break
+                if req is None:
+                    break
+                method, target, headers, body = req
+                resp = await self._dispatch(method, target, headers, body,
+                                            peer)
+                writer.write(resp)
+                await writer.drain()
+                if headers.get("connection", "").lower() == "close":
+                    break
+        except (ConnectionError, asyncio.IncompleteReadError,
+                asyncio.CancelledError):
+            pass
+        finally:
+            self._conns.discard(task)
+            writer.close()
+            with contextlib.suppress(Exception):
+                await writer.wait_closed()
+
+    # -- dispatch -----------------------------------------------------------
+    async def _dispatch(self, method: str, target: str,
+                        headers: Dict[str, str], body: bytes,
+                        peer: Tuple) -> bytes:
+        split = urlsplit(target)
+        query = {k: v[-1] for k, v in parse_qs(split.query).items()}
+        handler = None
+        path_matched = False
+        for verb, pattern, name in _ROUTES:
+            m = pattern.match(split.path)
+            if m:
+                path_matched = True
+                if verb == method:
+                    handler = (name, m.groups())
+                    break
+        self._count("requests")
+        if handler is None:
+            status = 405 if path_matched else 404
+            self._count("errors")
+            return _json_response(status, wire.error_body(
+                f"no route for {method} {split.path}"))
+        name, groups = handler
+
+        # liveness/metrics bypass throttling — they must answer even
+        # (especially) when the service is shedding load
+        if name in ("healthz", "metricz"):
+            return _json_response(200, self._local_verb(name))
+
+        client = headers.get("x-client-id") or f"{peer[0]}:{peer[1]}"
+        if not self._limiter.allow(client):
+            retry = self._limiter.retry_after(client)
+            self._count("throttled_rate")
+            return _json_response(
+                429, wire.error_body("rate limited", retry_after=retry),
+                extra_headers={"Retry-After": f"{max(retry, 0.001):.3f}"})
+        if self._queue_depth >= self.max_queue:
+            retry = 0.02 * (self._queue_depth - self.max_queue + 1)
+            self._count("throttled_queue")
+            return _json_response(
+                429, wire.error_body("server busy", retry_after=retry),
+                extra_headers={"Retry-After": f"{retry:.3f}"})
+
+        try:
+            parsed = json.loads(body.decode() or "{}") if method in (
+                "PUT", "POST") else {}
+            if not isinstance(parsed, dict):
+                raise ValueError("body must be a JSON object")
+            fn = await self._bind_verb(name, groups, query, parsed)
+            loop = asyncio.get_running_loop()
+            self._queue_depth += 1
+            try:
+                result = await loop.run_in_executor(self._executor, fn)
+            finally:
+                self._queue_depth -= 1
+            return _json_response(200, result)
+        except _HTTPError as exc:
+            self._count("errors")
+            return _json_response(exc.status, wire.error_body(str(exc)))
+        except PoolUnavailable as exc:
+            status = 404 if "empty" in str(exc) else 503
+            self._count("errors")
+            return _json_response(status, wire.error_body(str(exc)))
+        except (KeyError, ValueError, TypeError,
+                json.JSONDecodeError) as exc:
+            self._count("errors")
+            return _json_response(400, wire.error_body(
+                f"{exc.__class__.__name__}: {exc}"))
+        except Exception as exc:  # noqa: BLE001 — a handler bug must 500,
+            # not tear down the connection loop for every other client
+            self._count("errors")
+            return _json_response(500, wire.error_body(
+                f"internal error: {exc.__class__.__name__}: {exc}"))
+
+    def _local_verb(self, name: str) -> Dict[str, Any]:
+        if name == "healthz":
+            return {"ok": True, "wire_version": wire.WIRE_VERSION,
+                    "experiments": len(self.service.experiments())}
+        return {"metrics": dict(sorted(self._metrics.items())),
+                "queue_depth": self._queue_depth,
+                "rate_limited_clients": len(self._limiter)}
+
+    async def _ensure(self, name: str,
+                      config: Optional[ExperimentConfig] = None):
+        """First touch of a namespace opens journal files on disk — one
+        creation at a time, and exactly once per name."""
+        async with self._exp_lock:
+            return self.service.ensure(name, config)
+
+    async def _bind_verb(self, name: str, groups: Tuple, query: Dict[str, str],
+                         body: Dict[str, Any]):
+        """Resolve the route to a no-argument callable for the executor.
+        Experiment resolution (the only map mutation) happens here on the
+        loop, under the creation lock."""
+        if name == "list_experiments":
+            return lambda: {"experiments": self.service.experiments()}
+        exp_name = groups[0]
+        if name == "create":
+            cfg = ExperimentConfig.from_json(body)
+            try:
+                exp, created = await self._ensure(exp_name, cfg)
+            except ValueError as exc:
+                # namespace exists with a different config
+                raise _HTTPError(409, str(exc)) from exc
+            return lambda: {"experiment_name": exp.name, "created": created,
+                            "config": exp.config.__dict__.copy()}
+        exp, _ = await self._ensure(exp_name)
+        if name == "put":
+            items = wire.decode_put_request(body)
+            return partial(exp.put_batch, items)
+        if name == "get_random":
+            n = int(query.get("n", "1"))
+            return lambda: {"items": [
+                wire.random_item(e.genome, e.fitness)
+                for e in exp.get_random(n)]}
+        if name == "get_since":
+            seqs = wire.decode_cursor(query.get("seq"), exp.config.shards)
+            limit = int(query.get("limit", "64"))
+            cursor_id = query.get("cursor_id") or None
+
+            def drain():
+                items, cursors, dropped = exp.get_since(
+                    seqs, limit=limit, cursor_id=cursor_id)
+                return {"items": [wire.since_item(e, shard)
+                                  for e, shard in items],
+                        "cursor": cursors, "dropped": dropped}
+            return drain
+        if name == "best":
+            def best():
+                g, f = exp.get_best()
+                return wire.random_item(g, f)
+            return best
+        if name == "reset":
+            return lambda: {"experiment": exp.reset()}
+        if name == "stats":
+            return exp.stats
+        raise _HTTPError(500, f"unbound route {name}")
+
+
+@contextlib.contextmanager
+def background_server(service: Optional[PoolService] = None, **kw):
+    """Run a :class:`PoolHTTPServer` on a daemon thread with its own
+    event loop — the test/example harness. Yields the started server
+    (``.url`` / ``.port`` are live); tears it down on exit."""
+    service = service if service is not None else PoolService()
+    server = PoolHTTPServer(service, **kw)
+    ready = threading.Event()
+    failure: list = []
+
+    async def _main():
+        try:
+            await server.start()
+        except Exception as exc:  # noqa: BLE001 — surface bind errors to
+            failure.append(exc)   # the foreground thread, not the loop's
+            ready.set()           # stderr
+            return
+        ready.set()
+        await server.serve_forever()
+        await server.aclose()
+
+    loop = asyncio.new_event_loop()
+    thread = threading.Thread(target=lambda: loop.run_until_complete(_main()),
+                              daemon=True)
+    thread.start()
+    if not ready.wait(timeout=10.0):
+        raise RuntimeError("server failed to start within 10s")
+    if failure:
+        raise failure[0]
+    try:
+        yield server
+    finally:
+        loop.call_soon_threadsafe(server.stop)
+        thread.join(timeout=10.0)
+        if thread.is_alive():  # wedged loop: don't hang the test session
+            raise RuntimeError("server thread did not shut down")
+        loop.close()

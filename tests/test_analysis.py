@@ -217,6 +217,88 @@ def test_lck01_clean_twin_and_nested_worker(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# LCK02 (asyncio flavor)
+# ---------------------------------------------------------------------------
+def test_lck02_unlocked_read_of_async_locked_state(tmp_path):
+    res = lint_source(tmp_path, """\
+        import asyncio
+
+        class Registry:
+            def __init__(self):
+                self._lock = asyncio.Lock()
+                self._count = 0
+
+            async def add(self):
+                async with self._lock:
+                    self._count = self._count + 1
+
+            async def snapshot(self):
+                return self._count
+        """)
+    assert ("LCK02", "mod.py", 13) in rules_at(res)
+    assert not any(r == "LCK01" for r, _, _ in rules_at(res))
+
+
+def test_lck02_clean_twin_and_loop_owned_state(tmp_path):
+    # single-writer event-loop ownership: state mutated in await-free
+    # sections and never written under the lock stays out of the
+    # contract — the PoolHTTPServer counter pattern must not be flagged
+    res = lint_source(tmp_path, """\
+        import asyncio
+
+        class Frontend:
+            def __init__(self):
+                self._lock = asyncio.Lock()
+                self._registry = {}
+                self._requests = 0
+
+            async def create(self, name):
+                async with self._lock:
+                    self._registry = {**self._registry, name: 1}
+
+            async def handle(self, name):
+                self._requests += 1
+                async with self._lock:
+                    return self._registry.get(name)
+        """)
+    assert rules_at(res) == set()
+
+
+def test_lck02_and_lck01_flavors_do_not_cross(tmp_path):
+    # holding the thread lock must not bless access to asyncio-locked
+    # state, and vice versa
+    res = lint_source(tmp_path, """\
+        import asyncio
+        import threading
+
+        class Mixed:
+            def __init__(self):
+                self._tlock = threading.Lock()
+                self._alock = asyncio.Lock()
+                self._a = 0
+                self._t = 0
+
+            async def bump_a(self):
+                async with self._alock:
+                    self._a = 1
+
+            def bump_t(self):
+                with self._tlock:
+                    self._t = 1
+
+            def wrong_flavor(self):
+                with self._tlock:
+                    return self._a
+
+            async def wrong_flavor_async(self):
+                async with self._alock:
+                    return self._t
+        """)
+    hits = {(r, line) for r, _, line in rules_at(res)}
+    assert ("LCK02", 21) in hits and ("LCK01", 25) in hits
+
+
+# ---------------------------------------------------------------------------
 # PAL01 / JIT01
 # ---------------------------------------------------------------------------
 def test_pal01_impure_kernel_body(tmp_path):

@@ -168,13 +168,19 @@ class TestShardedDurability:
         per = max(1, 4 // mesh.shape["islands"])
         acfg = AsyncConfig(min_rate=0.5, max_rate=1.0, staleness=2,
                            churn_fraction=0.25, inbox_capacity=3)
+        # hard enough that no device count solves it before the second
+        # snapshot — an early-stop at tick < 8 would leave only step_4
+        # and the drop below nothing to resume from (CI runs with
+        # --xla_force_host_platform_device_count=8; onemax(24) falls to
+        # 8 islands inside 8 ticks)
+        hard = make_onemax(96)
         full = run_fused_sharded_async(
-            mesh, PROBLEM, CFG, acfg=acfg, islands_per_shard=per,
+            mesh, hard, CFG, acfg=acfg, islands_per_shard=per,
             max_ticks=9, rng=KEY, return_stats=True, return_astate=True,
             snapshot_every=4, snapshot_dir=str(tmp_path))
         drop_last_snapshot(str(tmp_path))
         res = run_fused_sharded_async(
-            mesh, PROBLEM, CFG, acfg=acfg, islands_per_shard=per,
+            mesh, hard, CFG, acfg=acfg, islands_per_shard=per,
             max_ticks=9, rng=KEY, return_stats=True, return_astate=True,
             snapshot_every=4, snapshot_dir=str(tmp_path), resume=True)
         assert trees_equal(full, res)
