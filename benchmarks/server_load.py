@@ -37,7 +37,6 @@ from __future__ import annotations
 import argparse
 import asyncio
 import json
-import math
 import os
 import random
 import signal
@@ -54,40 +53,15 @@ for _p in (_SRC, _REPO):   # _REPO: `from benchmarks import hostmeta`
     if _p not in sys.path:
         sys.path.insert(0, _p)
 
-# ---------------------------------------------------------------------------
-# latency histogram (log-spaced, mergeable across processes)
-# ---------------------------------------------------------------------------
-_HIST_BINS = 256
-_HIST_LO_MS = 0.05
-_HIST_HI_MS = 120_000.0
-_LOG_LO = math.log(_HIST_LO_MS)
-_LOG_SPAN = math.log(_HIST_HI_MS) - _LOG_LO
+# The log-spaced mergeable latency histogram that used to live here moved
+# to repro.obs.metrics so the HTTP frontend and the timeline CLI share one
+# binning; these re-exports keep the worker subprocess and old callers
+# working (still stdlib-only — no jax in workers).
+from repro.obs.metrics import (  # noqa: E402
+    _HIST_BINS, _HIST_HI_MS, _HIST_LO_MS, hist_index, hist_percentile,
+    hist_value)
 
-
-def hist_index(ms: float) -> int:
-    if ms <= _HIST_LO_MS:
-        return 0
-    i = int((math.log(ms) - _LOG_LO) / _LOG_SPAN * _HIST_BINS)
-    return min(max(i, 0), _HIST_BINS - 1)
-
-
-def hist_value(i: int) -> float:
-    """Geometric midpoint of bin i — the value a percentile reports."""
-    frac = (i + 0.5) / _HIST_BINS
-    return math.exp(_LOG_LO + frac * _LOG_SPAN)
-
-
-def hist_percentile(counts: List[int], q: float) -> float:
-    total = sum(counts)
-    if total == 0:
-        return 0.0
-    target = q * total
-    seen = 0
-    for i, c in enumerate(counts):
-        seen += c
-        if seen >= target:
-            return hist_value(i)
-    return hist_value(_HIST_BINS - 1)
+_ = (_HIST_LO_MS, _HIST_HI_MS, hist_value)   # legacy re-exports
 
 
 # ---------------------------------------------------------------------------
@@ -301,7 +275,9 @@ def run_scenario(name: str, url: Optional[str] = None,
         drainer.stop()
         drainer.join(timeout=120.0)
         stats = admin.stats()
-        metricz = admin._verb("GET", "/metricz")
+        # the bare endpoint now serves Prometheus text; the harness wants
+        # the structured legacy dict
+        metricz = admin._verb("GET", "/metricz?format=json")
         admin.close()
         drainer.client.close()
 

@@ -52,6 +52,7 @@ The sync demo also runs a StragglerMonitor over simulated heterogeneous
 hardware and prints the per-worker work-scale the driver would apply.
 """
 import argparse
+import json
 import time
 from functools import partial
 
@@ -64,6 +65,8 @@ from repro.core import (AcceptanceConfig, AsyncConfig, AsyncHostBridge,
                         PoolServer, available_acceptance_policies, make_trap)
 from repro.core import async_migration, evolution, island as island_lib, \
     pool as pool_lib
+from repro.obs import counters as obs_lib
+from repro.obs import trace as obs_trace
 from repro.runtime import StragglerMonitor, grow_islands, shrink_islands
 
 
@@ -212,10 +215,16 @@ def run_async(args):
 
     step = jax.jit(partial(async_migration.async_step, problem=problem,
                            cfg=cfg, mig=mig, acfg=acfg, w2=False))
+    obs = obs_lib.init_obs(n) if args.obs_json else None
     t = 0
     for t in range(1, ticks + 1):
         rng, k = jax.random.split(rng)
-        islands, pool, astate = step(islands, pool, astate, k, tick=t)
+        with obs_trace.span("driver.tick", tick=t):
+            if obs is not None:
+                islands, pool, astate, obs = step(islands, pool, astate, k,
+                                                  tick=t, obs=obs)
+            else:
+                islands, pool, astate = step(islands, pool, astate, k, tick=t)
         pool = bridge.sync(pool, t)     # non-blocking: never waits on server
         volunteer_round()
         fires = np.asarray(astate.fires)
@@ -233,6 +242,18 @@ def run_async(args):
     print(f"total island-epochs fired: {int(np.asarray(astate.fires).sum())} "
           f"of {n * max(t, 1)} synchronous equivalents; "
           f"bridge={bridge.stats()}")
+    if obs is not None:
+        harvest = obs_lib.harvest(obs)
+        tot = harvest["totals"]
+        balanced = tot["delivered"] == tot["accepted"] + tot["rejected"]
+        with open(args.obs_json, "w") as fh:
+            json.dump(harvest, fh, indent=1, sort_keys=True)
+            fh.write("\n")
+        print(f"obs ledger: fired={tot['fired']} "
+              f"delivered={tot['delivered']} accepted={tot['accepted']} "
+              f"rejected={tot['rejected']} churn_down={tot['churn_down']} "
+              f"balanced={'OK' if balanced else 'BROKEN'} "
+              f"-> {args.obs_json}")
 
 
 def main():
@@ -254,13 +275,30 @@ def main():
                          "JSON wire protocol instead of an in-process pool")
     ap.add_argument("--experiment", default="volunteer-sim",
                     help="experiment namespace on the networked server")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record host spans (bridge/pool/driver) and write "
+                         "a Chrome trace-event JSON here — open in Perfetto")
+    ap.add_argument("--obs-json", default=None, metavar="PATH",
+                    help="async mode only: carry on-device ObsCounters "
+                         "through every tick and write the harvested "
+                         "ledger (delivered == accepted + rejected) here")
     args = ap.parse_args()
     if args.server and args.runtime != "async":
         ap.error("--server requires --runtime async")
-    if args.runtime == "async":
-        run_async(args)
-    else:
-        run_sync()
+    if args.obs_json and args.runtime != "async":
+        ap.error("--obs-json requires --runtime async")
+    tracer = obs_trace.enable() if args.trace else None
+    try:
+        if args.runtime == "async":
+            run_async(args)
+        else:
+            run_sync()
+    finally:
+        if tracer is not None:
+            tracer.export_chrome(args.trace)
+            print(f"wrote Chrome trace ({len(tracer.events())} events) "
+                  f"-> {args.trace}")
+            obs_trace.disable()
 
 
 if __name__ == "__main__":

@@ -92,6 +92,27 @@ PY
 echo "== kill -9 + resume smoke (segmented drivers + journaled PoolServer) =="
 python scripts/kill_resume_smoke.py
 
+echo "== observability smoke (traced volunteer_sim: trace parses, ledger balances) =="
+# Async + churn exercises every counter; the timeline CLI exits 1 on an
+# unbalanced ledger. obs_trace.json is uploaded as a CI artifact so a
+# red run can be dropped straight into Perfetto (docs/observability.md).
+python examples/volunteer_sim.py --runtime async --churn 0.4 --ticks 12 \
+    --trace obs_trace.json --obs-json obs_counters.json
+python - <<'PY'
+import json
+trace = json.load(open("obs_trace.json"))
+events = [e for e in trace["traceEvents"] if e.get("ph") == "X"]
+assert events, "traced run recorded no spans"
+assert any(e["name"] == "driver.tick" for e in events), "no driver.tick spans"
+obs = json.load(open("obs_counters.json"))
+t = obs["totals"]
+assert t["delivered"] == t["accepted"] + t["rejected"], f"ledger broken: {t}"
+print(f"  obs smoke: {len(events)} spans, ledger "
+      f"delivered={t['delivered']} accepted={t['accepted']} "
+      f"rejected={t['rejected']} balanced OK")
+PY
+python -m repro.obs obs_trace.json --obs obs_counters.json
+
 echo "== server load smoke (500 volunteers over the wire) + regression gate =="
 # BENCH_server.json is a *committed* artifact whose headline row (10k
 # volunteers) only a deliberate `benchmarks/server_load.py --full` run can

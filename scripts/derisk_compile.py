@@ -79,7 +79,7 @@ def main():
         ps = param_shardings(mesh)
         data_sh = NamedSharding(mesh, P(batch_axes[0], None))
         tok = jax.ShapeDtypeStruct((BATCH, SEQ), jnp.int32)
-        t0 = time.time()
+        t0 = time.perf_counter()
         with jax.set_mesh(mesh):
             jitted = jax.jit(
                 train_step,
@@ -87,9 +87,9 @@ def main():
                 out_shardings=(ps, NamedSharding(mesh, P())),
             )
             lowered = jitted.lower(init_specs(), tok, tok)
-            t1 = time.time()
+            t1 = time.perf_counter()
             compiled = lowered.compile()
-            t2 = time.time()
+            t2 = time.perf_counter()
         print(f"mesh {shape}: lower {t1-t0:.1f}s compile {t2-t1:.1f}s")
         try:
             ma = compiled.memory_analysis()

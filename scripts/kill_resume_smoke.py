@@ -69,8 +69,8 @@ def run(cmd, **kw) -> str:
 def wait_for_snapshot(snap_dir: str, proc, timeout: float = 300.0) -> bool:
     """True once a published step dir exists; False if the victim finished
     first (won the race) — both are valid smoke states."""
-    t0 = time.time()
-    while time.time() - t0 < timeout:
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < timeout:
         if any(re.fullmatch(r"step_\d+", n)
                for n in (os.listdir(snap_dir) if os.path.isdir(snap_dir)
                          else [])):
@@ -120,8 +120,8 @@ def leg2_server_kill_restart(journal: str) -> None:
         [sys.executable, "-c",
          PUT_STREAMER.format(root=ROOT, journal=journal)],
         env=ENV, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
-    t0 = time.time()
-    while time.time() - t0 < 120:
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < 120:
         if os.path.exists(journal) and sum(1 for _ in open(journal)) >= 50:
             break
         if streamer.poll() is not None:
@@ -208,8 +208,8 @@ def leg4_service_kill_restart(spool: str) -> None:
     # drain exactly-once while the burst is running, then kill mid-flight
     drain = RemotePoolServer(url, experiment="smoke4", client_id="drain")
     cursor, seen, pre_dropped = -1, set(), 0
-    t0 = time.time()
-    while time.time() - t0 < 120:
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < 120:
         entries, cursor, d = drain.get_since(cursor, limit=64,
                                              cursor_id="smoke4")
         pre_dropped += d

@@ -4,11 +4,12 @@ Exits 0 when every finding is pragma- or baseline-suppressed, 1 when any
 active finding (or parse error, or reasonless pragma) remains, 2 on bad
 invocation.  ``--format github`` emits ``::error`` workflow commands.
 
-``--selfcheck`` writes known-bad snippets (a key-reuse RNG violation and
-unlocked reads of locked state, one per lock flavor: threading/LCK01 and
-asyncio/LCK02) to a scratch directory, runs the analyzer over them, and
-exits 0 only if all are caught — CI runs it so a silently broken
-analyzer cannot green-light the tree.
+``--selfcheck`` writes known-bad snippets (a key-reuse RNG violation,
+unlocked reads of locked state — one per lock flavor: threading/LCK01
+and asyncio/LCK02 — and a wall-clock duration, OBS01) to a scratch
+directory, runs the analyzer over them, and exits 0 only if all are
+caught — CI runs it so a silently broken analyzer cannot green-light
+the tree.
 """
 from __future__ import annotations
 
@@ -64,9 +65,19 @@ SELFCHECK_SNIPPETS = {
         "    async def snapshot(self):\n"
         "        return self._count\n"
     ),
+    "bad_wallclock.py": (
+        "import time\n"
+        "\n"
+        "\n"
+        "def timed_work(fn):\n"
+        "    t0 = time.time()\n"
+        "    fn()\n"
+        "    return time.time() - t0\n"
+    ),
 }
 SELFCHECK_EXPECT = {"bad_rng.py": "RNG01", "bad_lock.py": "LCK01",
-                    "bad_async_lock.py": "LCK02"}
+                    "bad_async_lock.py": "LCK02",
+                    "bad_wallclock.py": "OBS01"}
 
 
 def _selfcheck() -> int:

@@ -11,7 +11,7 @@ from typing import Dict, List, Optional, Tuple
 
 from .findings import Baseline, Finding, parse_pragmas
 from .symbols import ModuleInfo, Project, load_project
-from .passes import donation, locks, purity, registry, rng
+from .passes import donation, locks, obs, purity, registry, rng
 
 #: (name, runner) in report order.  Each runner takes a Project and
 #: returns a list of Findings.
@@ -21,6 +21,7 @@ ALL_PASSES: List[Tuple[str, object]] = [
     ("purity", purity.run),
     ("registry", registry.run),
     ("donation", donation.run),
+    ("obs", obs.run),
 ]
 
 SKIP_DIRS = {"__pycache__", ".git", ".venv", "node_modules", "build",

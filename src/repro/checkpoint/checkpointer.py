@@ -28,6 +28,8 @@ import ml_dtypes  # noqa: F401 — registers bfloat16/f8 with numpy
 import numpy as np
 from jax.numpy import asarray as jnp_asarray
 
+from repro.obs import trace as obs_trace
+
 _SEP = "::"
 
 
@@ -206,11 +208,14 @@ class Checkpointer:
                     impl=str(jax.random.key_impl(x)))
             return jax.device_get(x)
 
-        host_tree = jax.tree.map(snap, tree)
+        with obs_trace.span("checkpoint.snapshot", step=step):
+            host_tree = jax.tree.map(snap, tree)
 
         def work():
             try:
-                save(self.directory, step, host_tree, meta, keep=self.keep)
+                with obs_trace.span("checkpoint.write", step=step):
+                    save(self.directory, step, host_tree, meta,
+                         keep=self.keep)
             except BaseException as e:  # noqa: BLE001
                 self._errors.append(e)
 

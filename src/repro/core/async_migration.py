@@ -66,6 +66,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import counters as obs_lib
+from repro.obs import trace as obs_trace
+
 from . import acceptance as acceptance_lib
 from . import evolution as evolution_lib
 from . import island as island_lib
@@ -208,9 +211,13 @@ def _inbox_push(astate: AsyncState, imm_g: Array, imm_f: Array,
 
 
 def _inbox_take(astate: AsyncState, tick: Array, staleness: int,
-                absorb: Array) -> Tuple[Array, Array, AsyncState]:
+                absorb: Array, with_ledger: bool = False):
     """Best live (age <= staleness) entry per absorbing island; consumed
-    entries are cleared so nothing is absorbed twice."""
+    entries are cleared so nothing is absorbed twice.
+
+    ``with_ledger=True`` appends ``(consumed, take_age)`` to the return —
+    the per-island absorbed mask and the age in ticks of each absorbed
+    entry (observability's inbox-staleness histogram)."""
     age = jnp.asarray(tick, jnp.int32) - astate.inbox_born
     live = ((astate.inbox_born >= 0) & (age >= 0) & (age <= staleness)
             & jnp.isfinite(astate.inbox_fitness))
@@ -222,10 +229,13 @@ def _inbox_take(astate: AsyncState, tick: Array, staleness: int,
     take_g = astate.inbox_genomes[rows, j]
     consumed = absorb & jnp.isfinite(take_f)
     cleared = (consumed[:, None] & (jnp.arange(cap)[None, :] == j[:, None]))
-    return take_g, take_f, astate._replace(
+    astate = astate._replace(
         inbox_fitness=jnp.where(cleared, NEG_INF, astate.inbox_fitness),
         inbox_born=jnp.where(cleared, -1, astate.inbox_born),
     )
+    if with_ledger:
+        return take_g, take_f, astate, consumed, age[rows, j]
+    return take_g, take_f, astate
 
 
 # ---------------------------------------------------------------------------
@@ -235,8 +245,7 @@ def async_step(islands: IslandState, pool: PoolState, astate: AsyncState,
                rng: Array, problem: Problem, cfg: EAConfig,
                mig: MigrationConfig, acfg: AsyncConfig, w2: bool,
                server_up: Array | bool = True, tick: Array | int = 0,
-               axis: Optional[str] = None,
-               ) -> Tuple[IslandState, PoolState, AsyncState]:
+               axis: Optional[str] = None, obs=None):
     """One global tick: clocks accrue, firing islands evolve an epoch and
     exchange through the topology registry, everyone else is untouched.
 
@@ -244,12 +253,19 @@ def async_step(islands: IslandState, pool: PoolState, astate: AsyncState,
     server) without stopping local evolution or clock accrual; churned-down
     islands additionally freeze entirely. In the degenerate config this is
     exactly :func:`repro.core.evolution.epoch_step`.
+
+    ``obs`` (an :class:`~repro.obs.counters.ObsCounters`) switches on the
+    counter ledger — churn down-ticks, the delivery ledger and the absorb
+    age histogram — and appends it to the return tuple.
     """
     tick = jnp.asarray(tick, jnp.int32)
     up = ~((astate.down_start <= tick) & (tick < astate.down_end))
     clock = astate.clock + jnp.where(up, astate.rate, 0.0)
     fire = up & (clock >= acfg.period)
     clock = jnp.where(fire, clock - acfg.period, clock)
+
+    if obs is not None:
+        obs = obs_lib.record_churn(obs, ~up)
 
     # autonomous phase — only firing islands advance (their own rng stream)
     evolved = jax.vmap(
@@ -258,14 +274,26 @@ def async_step(islands: IslandState, pool: PoolState, astate: AsyncState,
 
     # exchange: the fire mask is the topology's vector availability
     exchange = fire & jnp.asarray(server_up)
-    pool, imm_g, imm_f = migration_lib.migrate(
-        pool, islands.best_genome, islands.best_fitness, rng, mig,
-        axis=axis, epoch=tick, available=exchange)
+    if obs is not None:
+        pool, imm_g, imm_f, delivered, accepted = migration_lib.migrate(
+            pool, islands.best_genome, islands.best_fitness, rng, mig,
+            axis=axis, epoch=tick, available=exchange, with_ledger=True)
+        obs = obs_lib.record_exchange(obs, exchange, delivered, accepted)
+    else:
+        pool, imm_g, imm_f = migration_lib.migrate(
+            pool, islands.best_genome, islands.best_fitness, rng, mig,
+            axis=axis, epoch=tick, available=exchange)
 
     # deliveries land in the destination inbox; absorption happens at the
     # destination's own fire (staleness-bounded)
     astate = _inbox_push(astate, imm_g, imm_f, tick)
-    take_g, take_f, astate = _inbox_take(astate, tick, acfg.staleness, fire)
+    if obs is not None:
+        take_g, take_f, astate, consumed, take_age = _inbox_take(
+            astate, tick, acfg.staleness, fire, with_ledger=True)
+        obs = obs_lib.record_absorb(obs, consumed, take_age)
+    else:
+        take_g, take_f, astate = _inbox_take(astate, tick, acfg.staleness,
+                                             fire)
     # re-gate at absorb: an entry accepted at delivery time may have gone
     # stale relative to the island's *current* best by its absorb tick.
     # Deterministic policies make this idempotent, so the degenerate
@@ -288,6 +316,8 @@ def async_step(islands: IslandState, pool: PoolState, astate: AsyncState,
 
     astate = astate._replace(clock=clock,
                              fires=astate.fires + fire.astype(jnp.int32))
+    if obs is not None:
+        return islands, pool, astate, obs
     return islands, pool, astate
 
 
@@ -374,7 +404,7 @@ def run_experiment_async(problem: Problem,
 def fused_scan_async(islands: IslandState, pool: PoolState,
                      astate: AsyncState, key: Array,
                      tick0: Array | int = 0, stopped0: Array | bool = False,
-                     *, problem: Problem, cfg: EAConfig,
+                     obs0=(), *, problem: Problem, cfg: EAConfig,
                      mig: MigrationConfig, acfg: AsyncConfig,
                      w2: bool, max_ticks: int, axis: Optional[str] = None,
                      with_stats: bool = True):
@@ -386,7 +416,11 @@ def fused_scan_async(islands: IslandState, pool: PoolState,
     this is a resumable *segment*: the full carry (islands, pool, astate,
     key, tick, stopped) enters as arguments and leaves as results, so
     chained segments are bit-for-bit one long scan
-    (:func:`repro.core.evolution.run_segments`)."""
+    (:func:`repro.core.evolution.run_segments`).  ``obs0`` — an
+    :class:`~repro.obs.counters.ObsCounters` to accumulate through the
+    carry (``()`` disables); returned in the slot before ``stats``."""
+    with_obs = hasattr(obs0, "_fields")
+
     def _global_success(islands: IslandState) -> Array:
         s = success_mask(islands, problem, cfg).any()
         if axis is not None:
@@ -394,22 +428,30 @@ def fused_scan_async(islands: IslandState, pool: PoolState,
         return s
 
     def body(carry, _):
-        islands, pool, astate, key, tick, stopped = carry
+        islands, pool, astate, key, tick, stopped, obs = carry
         key, k_mig = jax.random.split(key)
 
         def live(args):
-            i, p, a = args
+            i, p, a, o = args
             # tick + 1: match the host drivers' 1-based tick numbers
-            return async_step(i, p, a, k_mig, problem, cfg, mig, acfg, w2,
-                              server_up=True, tick=tick + 1, axis=axis)
+            if with_obs:
+                return async_step(i, p, a, k_mig, problem, cfg, mig, acfg,
+                                  w2, server_up=True, tick=tick + 1,
+                                  axis=axis, obs=o)
+            i, p, a = async_step(i, p, a, k_mig, problem, cfg, mig, acfg,
+                                 w2, server_up=True, tick=tick + 1,
+                                 axis=axis)
+            return i, p, a, o
 
-        islands, pool, astate = jax.lax.cond(
-            stopped, lambda a: a, live, (islands, pool, astate))
+        islands, pool, astate, obs = jax.lax.cond(
+            stopped, lambda a: a, live, (islands, pool, astate, obs))
         tick = jnp.where(stopped, tick, tick + 1)
         if not w2:
             stopped = stopped | _global_success(islands)
+        if with_obs:
+            obs = obs_lib.record_early_stop(obs, stopped, tick)
         stats = collect_stats(islands, tick, axis=axis) if with_stats else ()
-        return (islands, pool, astate, key, tick, stopped), stats
+        return (islands, pool, astate, key, tick, stopped, obs), stats
 
     stopped0 = jnp.asarray(stopped0)
     if not w2:
@@ -417,10 +459,10 @@ def fused_scan_async(islands: IslandState, pool: PoolState,
         # segments OR with the restored latch (same value either way)
         stopped0 = stopped0 | _global_success(islands)
     init = (islands, pool, astate, key, jnp.asarray(tick0, jnp.int32),
-            stopped0)
-    (islands, pool, astate, key, ticks, stopped), stats = jax.lax.scan(
+            stopped0, obs0)
+    (islands, pool, astate, key, ticks, stopped, obs), stats = jax.lax.scan(
         body, init, None, length=max_ticks)
-    return islands, pool, astate, key, ticks, stopped, stats
+    return islands, pool, astate, key, ticks, stopped, obs, stats
 
 
 def run_fused_async(problem: Problem,
@@ -433,6 +475,7 @@ def run_fused_async(problem: Problem,
                     w2: bool = False,
                     return_stats: bool = False,
                     return_astate: bool = False,
+                    return_obs: bool = False,
                     snapshot_every: Optional[int] = None,
                     snapshot_dir: Optional[str] = None,
                     snapshot_keep: int = 3,
@@ -459,7 +502,8 @@ def run_fused_async(problem: Problem,
             islands=islands0, pool=pool0, astate=astate0, key=k_loop,
             epoch=jnp.int32(0), stopped=jnp.asarray(False),
             stats=evolution_lib.empty_stats() if return_stats else (),
-            next_uuid=jnp.int32(n))
+            next_uuid=jnp.int32(n),
+            obs=obs_lib.init_obs(n) if return_obs else ())
 
     state = None
     if resume:
@@ -477,7 +521,8 @@ def run_fused_async(problem: Problem,
     def segment_fn(state: ExperimentState, seg_len: int):
         run = fused_jit(
             problem,
-            ("async", cfg, mig, acfg, w2, seg_len, return_stats),
+            ("async", cfg, mig, acfg, w2, seg_len, return_stats,
+             return_obs),
             lambda: jax.jit(partial(fused_scan_async, problem=problem,
                                     cfg=cfg, mig=mig, acfg=acfg, w2=w2,
                                     max_ticks=seg_len,
@@ -485,10 +530,12 @@ def run_fused_async(problem: Problem,
                             donate_argnums=(0, 1, 2)))
         islands, pool, astate = unique_buffers(
             (state.islands, state.pool, state.astate))
-        islands, pool, astate, key, tick, stopped, seg_stats = run(
-            islands, pool, astate, state.key, state.epoch, state.stopped)
+        islands, pool, astate, key, tick, stopped, obs, seg_stats = run(
+            islands, pool, astate, state.key, state.epoch, state.stopped,
+            state.obs)
         return state._replace(islands=islands, pool=pool, astate=astate,
-                              key=key, epoch=tick, stopped=stopped), seg_stats
+                              key=key, epoch=tick, stopped=stopped,
+                              obs=obs), seg_stats
 
     state = evolution_lib.run_segments(
         state, max_ticks, segment_fn, snapshot_every=snapshot_every,
@@ -498,6 +545,8 @@ def run_fused_async(problem: Problem,
         out += (state.stats,)
     if return_astate:
         out += (state.astate,)
+    if return_obs:
+        out += (obs_lib.harvest(state.obs),)
     return out
 
 
@@ -569,7 +618,8 @@ class AsyncHostBridge(migration_lib.HostBridge):
             genome, fitness = job
             try:
                 if genome is not None:
-                    self.server.put(genome, fitness, uuid=self.uuid)
+                    with obs_trace.span("bridge.put"):
+                        self.server.put(genome, fitness, uuid=self.uuid)
                     with self._flock:
                         self.pushed += 1
                 # read the cursor under the lock, do server I/O outside
@@ -577,8 +627,9 @@ class AsyncHostBridge(migration_lib.HostBridge):
                 # every one of these through stats()/_absorb_fetched
                 with self._flock:
                     cursor = self._last_seq
-                entries, cursor, dropped = self.server.get_since(
-                    cursor, limit=self.pull, cursor_id=self._cursor_id)
+                with obs_trace.span("bridge.drain"):
+                    entries, cursor, dropped = self.server.get_since(
+                        cursor, limit=self.pull, cursor_id=self._cursor_id)
                 fresh = [(e.genome.copy(), e.fitness) for e in entries
                          if e.uuid != self.uuid]
                 with self._flock:
@@ -610,12 +661,13 @@ class AsyncHostBridge(migration_lib.HostBridge):
     def sync(self, pool: PoolState, epoch: int = 0) -> PoolState:
         """Absorb fetched immigrants, enqueue best-out + fetch; never waits
         on the server."""
-        pool = self._absorb_fetched(pool)
-        if int(np.asarray(pool.count)) > 0:
-            g, f = pool_lib.pool_best(pool)
-            self._jobs.put((np.asarray(g), float(f)))
-        else:
-            self._jobs.put((None, 0.0))
+        with obs_trace.span("bridge.sync", epoch=int(epoch)):
+            pool = self._absorb_fetched(pool)
+            if int(np.asarray(pool.count)) > 0:
+                g, f = pool_lib.pool_best(pool)
+                self._jobs.put((np.asarray(g), float(f)))
+            else:
+                self._jobs.put((None, 0.0))
         return pool
 
     def flush(self, pool: PoolState) -> PoolState:

@@ -25,6 +25,8 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import trace as obs_trace
+
 from . import acceptance as acceptance_lib
 from .types import AcceptanceConfig
 
@@ -174,18 +176,20 @@ class PoolServer:
 
     def put(self, genome: Any, fitness: float, uuid: int = 0) -> int:
         """PUT a chromosome. Returns the current experiment number."""
-        return self._put(PoolEntry(np.asarray(genome), float(fitness),
-                                   int(uuid), -1))
+        with obs_trace.span("pool.put"):
+            return self._put(PoolEntry(np.asarray(genome), float(fitness),
+                                       int(uuid), -1))
 
     def put_with_payload(self, genome: Any, fitness: float, uuid: int = 0,
                          payload: Any = None) -> int:
         """PUT with opaque side-data (PBT weight snapshots / ckpt paths)."""
-        return self._put(PoolEntry(np.asarray(genome), float(fitness),
-                                   int(uuid), -1, payload=payload))
+        with obs_trace.span("pool.put"):
+            return self._put(PoolEntry(np.asarray(genome), float(fitness),
+                                       int(uuid), -1, payload=payload))
 
     def get_random_entry(self) -> Optional[PoolEntry]:
         """GET a random entry with metadata/payload (None when empty)."""
-        with self._lock:
+        with obs_trace.span("pool.get_random"), self._lock:
             self._check_up()
             self._n_gets += 1
             if not self._entries:
@@ -196,7 +200,7 @@ class PoolServer:
 
     def get_random(self) -> Tuple[np.ndarray, float]:
         """GET a uniformly random chromosome (paper's migration GET)."""
-        with self._lock:
+        with obs_trace.span("pool.get_random"), self._lock:
             self._check_up()
             self._n_gets += 1
             if not self._entries:
@@ -232,7 +236,7 @@ class PoolServer:
         silently degraded to at-most-once; now every hole is detected,
         counted exactly once (the cursor advances past a gap even when
         nothing is returned), and surfaced so the bridge can report it."""
-        with self._lock:
+        with obs_trace.span("pool.get_since"), self._lock:
             self._check_up()
             self._n_gets += 1
             if cursor_id is not None:
@@ -258,7 +262,7 @@ class PoolServer:
             return fresh, cursor, dropped
 
     def get_best(self) -> Tuple[np.ndarray, float]:
-        with self._lock:
+        with obs_trace.span("pool.get_best"), self._lock:
             self._check_up()
             if self._best is None:
                 raise PoolUnavailable("pool is empty")

@@ -36,6 +36,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compat import axis_size
+from repro.obs import counters as obs_lib
+from repro.obs import trace as obs_trace
 
 from . import island as island_lib
 from . import migration as migration_lib
@@ -51,15 +53,32 @@ from .types import (Array, EAConfig, ExperimentState, ExperimentStats,
 def epoch_step(islands: IslandState, pool: PoolState, rng: Array,
                problem: Problem, cfg: EAConfig, mig: MigrationConfig,
                w2: bool, available: Array | bool, epoch: Array | int = 0,
-               axis: Optional[str] = None) -> Tuple[IslandState, PoolState]:
+               axis: Optional[str] = None, obs=None):
     """One epoch for a batch of islands. ``axis=None`` runs batched on one
     shard; with a mesh axis name the call must execute inside ``shard_map``
-    and migration uses collectives over that axis."""
+    and migration uses collectives over that axis.
+
+    ``obs`` (an :class:`~repro.obs.counters.ObsCounters`) switches on the
+    on-device counter ledger: the return grows to ``(islands, pool, obs)``
+    and migration runs ``with_ledger`` so delivered/accepted/rejected
+    balance exactly.  ``obs=None`` (the default) is the legacy 2-tuple."""
     islands = jax.vmap(lambda s: island_lib.island_epoch(s, problem, cfg))(islands)
 
-    pool, imm_g, imm_f = migration_lib.migrate(
-        pool, islands.best_genome, islands.best_fitness, rng, mig,
-        axis=axis, epoch=epoch, available=available)
+    if obs is not None:
+        pool, imm_g, imm_f, delivered, accepted = migration_lib.migrate(
+            pool, islands.best_genome, islands.best_fitness, rng, mig,
+            axis=axis, epoch=epoch, available=available, with_ledger=True)
+        n = islands.best_fitness.shape[0]
+        fired = jnp.broadcast_to(jnp.asarray(available), (n,))
+        obs = obs_lib.record_exchange(obs, fired, delivered, accepted)
+        # the sync driver absorbs at delivery: every accepted immigrant
+        # enters the island the same epoch — age 0 by definition
+        obs = obs_lib.record_absorb(obs, accepted,
+                                    jnp.zeros((n,), jnp.int32))
+    else:
+        pool, imm_g, imm_f = migration_lib.migrate(
+            pool, islands.best_genome, islands.best_fitness, rng, mig,
+            axis=axis, epoch=epoch, available=available)
     islands = jax.vmap(
         partial(island_lib.receive_immigrant, replace=mig.replace)
     )(islands, imm_g, imm_f)
@@ -71,6 +90,8 @@ def epoch_step(islands: IslandState, pool: PoolState, rng: Array,
         islands = jax.tree.map(
             lambda r, o: jnp.where(
                 _bcast(succeeded, r.ndim), r, o), restarted, islands)
+    if obs is not None:
+        return islands, pool, obs
     return islands, pool
 
 
@@ -221,12 +242,11 @@ def _host_pool_exchange(host_pool, islands: IslandState) -> None:
 # Fully fused driver (lax.scan — benchmark configuration)
 # ---------------------------------------------------------------------------
 def fused_scan(islands: IslandState, pool: PoolState, key: Array,
-               epoch0: Array | int = 0, stopped0: Array | bool = False, *,
+               epoch0: Array | int = 0, stopped0: Array | bool = False,
+               obs0=(), *,
                problem: Problem, cfg: EAConfig, mig: MigrationConfig,
                w2: bool, max_epochs: int, axis: Optional[str] = None,
-               with_stats: bool = True,
-               ) -> Tuple[IslandState, PoolState, Array, Array, Array,
-                          ExperimentStats]:
+               with_stats: bool = True):
     """``max_epochs`` epochs of the experiment as one ``lax.scan`` — a
     resumable *segment*: the whole scan carry (islands, pool, key, epoch,
     stopped) enters as arguments and leaves as results, so chaining
@@ -243,7 +263,13 @@ def fused_scan(islands: IslandState, pool: PoolState, key: Array,
     ``with_stats=False`` skips stats entirely (returning ``()`` in their
     place) — under SPMD that avoids the per-epoch psum/pmax scalar
     collectives when the caller would discard them anyway.
+
+    ``obs0`` — an :class:`~repro.obs.counters.ObsCounters` to accumulate
+    through the carry (``()`` disables, the default; the flag is static
+    via the pytree structure).  Returned in the slot before ``stats``.
     """
+    with_obs = hasattr(obs0, "_fields")
+
     def _global_success(islands: IslandState) -> Array:
         s = _success_mask(islands, problem, cfg).any()
         if axis is not None:
@@ -251,33 +277,42 @@ def fused_scan(islands: IslandState, pool: PoolState, key: Array,
         return s
 
     def body(carry, _):
-        islands, pool, key, epoch, stopped = carry
+        islands, pool, key, epoch, stopped, obs = carry
         key, k_mig = jax.random.split(key)
 
         def live(args):
-            i, p = args
+            i, p, o = args
             # epoch + 1: match the host-loop drivers' 1-based epoch numbers
             # (torus alternates direction on epoch parity)
-            return epoch_step(i, p, k_mig, problem, cfg, mig, w2, True,
+            if with_obs:
+                return epoch_step(i, p, k_mig, problem, cfg, mig, w2, True,
+                                  epoch=epoch + 1, axis=axis, obs=o)
+            i, p = epoch_step(i, p, k_mig, problem, cfg, mig, w2, True,
                               epoch=epoch + 1, axis=axis)
+            return i, p, o
 
-        islands, pool = jax.lax.cond(stopped, lambda a: a, live,
-                                     (islands, pool))
+        islands, pool, obs = jax.lax.cond(stopped, lambda a: a, live,
+                                          (islands, pool, obs))
         epoch = jnp.where(stopped, epoch, epoch + 1)
         if not w2:
             stopped = stopped | _global_success(islands)
+        if with_obs:
+            # outside the freeze cond and idempotent: latches the first
+            # stopping epoch, no-ops forever after
+            obs = obs_lib.record_early_stop(obs, stopped, epoch)
         stats = collect_stats(islands, epoch, axis=axis) if with_stats else ()
-        return (islands, pool, key, epoch, stopped), stats
+        return (islands, pool, key, epoch, stopped, obs), stats
 
     stopped0 = jnp.asarray(stopped0)
     if not w2:
         # idempotent re-latch: a fresh run tests the init population, a
         # resumed segment ORs with the restored latch (same value either way)
         stopped0 = stopped0 | _global_success(islands)
-    init = (islands, pool, key, jnp.asarray(epoch0, jnp.int32), stopped0)
-    (islands, pool, key, epochs, stopped), stats = jax.lax.scan(
+    init = (islands, pool, key, jnp.asarray(epoch0, jnp.int32), stopped0,
+            obs0)
+    (islands, pool, key, epochs, stopped, obs), stats = jax.lax.scan(
         body, init, None, length=max_epochs)
-    return islands, pool, key, epochs, stopped, stats
+    return islands, pool, key, epochs, stopped, obs, stats
 
 
 def unique_buffers(tree):
@@ -368,9 +403,10 @@ def _device_part(state: ExperimentState) -> ExperimentState:
     donation needs device arrays) and leave host-managed fields alone."""
     dev = jax.tree.map(jnp.asarray,
                        (state.islands, state.pool, state.astate, state.key,
-                        state.epoch, state.stopped))
+                        state.epoch, state.stopped, state.obs))
     return state._replace(islands=dev[0], pool=dev[1], astate=dev[2],
-                          key=dev[3], epoch=dev[4], stopped=dev[5])
+                          key=dev[3], epoch=dev[4], stopped=dev[5],
+                          obs=dev[6])
 
 
 def resolve_checkpointer(snapshot_dir, checkpointer, keep: int = 3):
@@ -417,7 +453,9 @@ def run_segments(state: ExperimentState, max_steps: int, segment_fn, *,
                                            ExperimentStats) else None
     for seg_len in segment_plan(int(np.asarray(state.epoch)), max_steps,
                                 snapshot_every):
-        state, seg_stats = segment_fn(state, seg_len)
+        with obs_trace.span("driver.segment", seg_len=seg_len,
+                            epoch=int(np.asarray(state.epoch))):
+            state, seg_stats = segment_fn(state, seg_len)
         if return_stats:
             seg_np = jax.tree.map(np.asarray, seg_stats)
             stats_host = seg_np if stats_host is None else jax.tree.map(
@@ -448,6 +486,7 @@ def run_fused(problem: Problem,
               rng: Optional[Array] = None,
               w2: bool = False,
               return_stats: bool = False,
+              return_obs: bool = False,
               snapshot_every: Optional[int] = None,
               snapshot_dir: Optional[str] = None,
               snapshot_keep: int = 3,
@@ -456,7 +495,9 @@ def run_fused(problem: Problem,
     """Entire experiment as jitted ``lax.scan`` segments with donated
     island/pool buffers. Returns ``(islands, pool, epochs)`` — plus the
     stacked per-epoch :class:`ExperimentStats` when ``return_stats`` is
-    true. Stops early on global success (non-W²).
+    true, plus the harvested :class:`~repro.obs.counters.ObsCounters`
+    dict when ``return_obs`` is true (appended last). Stops early on
+    global success (non-W²).
 
     Durability: ``snapshot_every=k`` splits the scan into ``k``-epoch
     segments and snapshots the full :class:`ExperimentState` to
@@ -481,7 +522,8 @@ def run_fused(problem: Problem,
             astate=(), key=jax.random.key(0), epoch=jnp.int32(0),
             stopped=jnp.asarray(False),
             stats=empty_stats() if return_stats else (),
-            next_uuid=jnp.int32(n_islands))
+            next_uuid=jnp.int32(n_islands),
+            obs=obs_lib.init_obs(n_islands) if return_obs else ())
         state = restore_experiment_state(ckpt, template)
         if int(state.islands.pop.shape[0]) != n_islands:
             from repro.runtime import elastic as elastic_lib  # deferred: avoid cycle
@@ -494,24 +536,30 @@ def run_fused(problem: Problem,
             islands=islands0, pool=pool0, astate=(), key=k_loop,
             epoch=jnp.int32(0), stopped=jnp.asarray(False),
             stats=empty_stats() if return_stats else (),
-            next_uuid=jnp.int32(n_islands))
+            next_uuid=jnp.int32(n_islands),
+            obs=obs_lib.init_obs(n_islands) if return_obs else ())
 
     def segment_fn(state: ExperimentState, seg_len: int):
         run = fused_jit(
-            problem, ("batched", cfg, mig, w2, seg_len, return_stats),
+            problem,
+            ("batched", cfg, mig, w2, seg_len, return_stats, return_obs),
             lambda: jax.jit(partial(fused_scan, problem=problem, cfg=cfg,
                                     mig=mig, w2=w2, max_epochs=seg_len,
                                     with_stats=return_stats),
                             donate_argnums=(0, 1)))
         islands, pool = unique_buffers((state.islands, state.pool))
-        islands, pool, key, epoch, stopped, seg_stats = run(
-            islands, pool, state.key, state.epoch, state.stopped)
+        islands, pool, key, epoch, stopped, obs, seg_stats = run(
+            islands, pool, state.key, state.epoch, state.stopped, state.obs)
         return state._replace(islands=islands, pool=pool, key=key,
-                              epoch=epoch, stopped=stopped), seg_stats
+                              epoch=epoch, stopped=stopped,
+                              obs=obs), seg_stats
 
     state = run_segments(state, max_epochs, segment_fn,
                          snapshot_every=snapshot_every, checkpointer=ckpt,
                          w2=w2, return_stats=return_stats)
+    out = (state.islands, state.pool, state.epoch)
     if return_stats:
-        return state.islands, state.pool, state.epoch, state.stats
-    return state.islands, state.pool, state.epoch
+        out += (state.stats,)
+    if return_obs:
+        out += (obs_lib.harvest(state.obs),)
+    return out

@@ -72,6 +72,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compat import axis_size
+from repro.obs import trace as obs_trace
 
 from . import acceptance as acceptance_lib
 from .pool import (NEG_INF, pool_best, pool_get_random, pool_insert_host,
@@ -137,7 +138,7 @@ def resolve_topology_name(mig: MigrationConfig) -> str:
 def migrate(pool: PoolState, bests_genome: Array, bests_fitness: Array,
             rng: Array, mig: MigrationConfig, *, axis: Optional[str] = None,
             epoch: Array | int = 0, available: Array | bool = True,
-            ) -> Tuple[PoolState, Array, Array]:
+            with_ledger: bool = False):
     """Dispatch one migration step through the registered topology, then
     gate the deliveries through the acceptance engine.
 
@@ -148,16 +149,25 @@ def migrate(pool: PoolState, bests_genome: Array, bests_fitness: Array,
     deliveries read ``-inf``. The ``always`` policy skips the gate
     entirely (bit-for-bit legacy behaviour). The pool topology's PUT side
     additionally dispatches the same policy against the shared pool
-    residents (see :func:`pool_topology`)."""
+    residents (see :func:`pool_topology`).
+
+    ``with_ledger=True`` returns ``(pool, imm_g, imm_f, delivered,
+    accepted)`` instead of the 3-tuple: per-island boolean masks of the
+    finite deliveries before and after the gate (so ``delivered ==
+    accepted + rejected`` balances by construction — the observability
+    counters' ledger, :mod:`repro.obs.counters`)."""
     topo = get_topology(resolve_topology_name(mig))
     pool, imm_g, imm_f = topo(pool, bests_genome, bests_fitness, rng,
                               mig=mig, axis=axis, epoch=epoch,
                               available=available)
+    delivered = jnp.isfinite(imm_f)
     acc = getattr(mig, "acceptance", None)
     if acc is not None and acc.policy != "always":
         imm_f = acceptance_lib.gate_immigrants(
             bests_genome, bests_fitness, imm_g, imm_f,
             jax.random.fold_in(rng, 0x5EED), acc)
+    if with_ledger:
+        return pool, imm_g, imm_f, delivered, jnp.isfinite(imm_f)
     return pool, imm_g, imm_f
 
 
@@ -446,33 +456,37 @@ class HostBridge:
             return pool
         from .async_pool import PoolUnavailable  # local: avoid import cycle
 
-        # best-out
-        try:
-            if int(pool.count) > 0:
-                g, f = pool_best(pool)
-                self.server.put(np.asarray(g), float(f), uuid=self.uuid)
-                self.pushed += 1
-        except PoolUnavailable:
-            self.lost += 1
-        # immigrants-in
-        genomes, fits = [], []
-        for _ in range(self.pull):
+        with obs_trace.span("bridge.sync", epoch=int(epoch)):
+            # best-out
             try:
-                g, f = self.server.get_random()
+                if int(pool.count) > 0:
+                    g, f = pool_best(pool)
+                    with obs_trace.span("bridge.put"):
+                        self.server.put(np.asarray(g), float(f),
+                                        uuid=self.uuid)
+                    self.pushed += 1
             except PoolUnavailable:
-                # an up-but-empty server is a normal cold start, not an
-                # outage — only count the loss when the server is down
-                if not getattr(self.server, "up", False):
-                    self.lost += 1
-                break
-            genomes.append(np.asarray(g))
-            fits.append(float(f))
-        if genomes:
-            pool = pool_insert_host(pool, genomes, fits,
-                                    acc=self.acceptance,
-                                    rng=jax.random.fold_in(
-                                        jax.random.key(17), epoch))
-            self.pulled += len(genomes)
+                self.lost += 1
+            # immigrants-in
+            genomes, fits = [], []
+            for _ in range(self.pull):
+                try:
+                    with obs_trace.span("bridge.get"):
+                        g, f = self.server.get_random()
+                except PoolUnavailable:
+                    # an up-but-empty server is a normal cold start, not an
+                    # outage — only count the loss when the server is down
+                    if not getattr(self.server, "up", False):
+                        self.lost += 1
+                    break
+                genomes.append(np.asarray(g))
+                fits.append(float(f))
+            if genomes:
+                pool = pool_insert_host(pool, genomes, fits,
+                                        acc=self.acceptance,
+                                        rng=jax.random.fold_in(
+                                            jax.random.key(17), epoch))
+                self.pulled += len(genomes)
         return pool
 
     def stats(self) -> Dict[str, int]:

@@ -44,6 +44,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.obs import counters as obs_lib
+from repro.obs.counters import ObsCounters
 
 from . import async_migration as async_lib
 from . import evolution as evolution_lib
@@ -62,6 +64,17 @@ def _island_spec(axis: str):
 
 def _pool_spec():
     return PoolState(*[P()] * len(PoolState._fields))
+
+
+def _obs_spec(axis: str, enabled: bool):
+    """Per-island counters are row-sharded; the early-stop latch is a
+    replicated scalar (derived from the psum'd stop flag). ``()`` when
+    observability is off — the carry slot stays an empty pytree."""
+    if not enabled:
+        return ()
+    return ObsCounters(
+        **{f: (P() if f == "early_stop_epoch" else P(axis))
+           for f in ObsCounters._fields})
 
 
 def make_sharded_epoch(mesh: Mesh, axis: str, problem: Problem,
@@ -157,13 +170,20 @@ def _place_state(mesh: Mesh, axis: str, state: ExperimentState,
     def replicated(x):
         return jax.device_put(jnp.asarray(x), NamedSharding(mesh, P()))
 
+    obs = state.obs
+    if hasattr(obs, "_fields"):
+        obs = obs._replace(
+            **{f: (replicated(v) if f == "early_stop_epoch"
+                   else row_sharded(v))
+               for f, v in zip(obs._fields, obs)})
     return state._replace(
         islands=jax.tree.map(row_sharded, state.islands),
         pool=jax.tree.map(replicated, state.pool),
         astate=jax.tree.map(row_sharded, state.astate),
         key=replicated(state.key),
         epoch=replicated(state.epoch),
-        stopped=replicated(state.stopped))
+        stopped=replicated(state.stopped),
+        obs=obs)
 
 
 def run_fused_sharded(mesh: Mesh, problem: Problem,
@@ -175,6 +195,7 @@ def run_fused_sharded(mesh: Mesh, problem: Problem,
                       w2: bool = False,
                       axis: str = "islands",
                       return_stats: bool = False,
+                      return_obs: bool = False,
                       snapshot_every: Optional[int] = None,
                       snapshot_dir: Optional[str] = None,
                       snapshot_keep: int = 3,
@@ -199,7 +220,8 @@ def run_fused_sharded(mesh: Mesh, problem: Problem,
         islands=ish, pool=psh, astate=(), key=k_loop, epoch=jnp.int32(0),
         stopped=jnp.asarray(False),
         stats=evolution_lib.empty_stats() if return_stats else (),
-        next_uuid=jnp.int32(n_islands))
+        next_uuid=jnp.int32(n_islands),
+        obs=obs_lib.init_obs(n_islands) if return_obs else ())
     if resume:
         if ckpt is None:
             raise ValueError("resume=True needs snapshot_dir or checkpointer")
@@ -217,35 +239,42 @@ def run_fused_sharded(mesh: Mesh, problem: Problem,
             stats_spec = (ExperimentStats(
                 *[P()] * len(ExperimentStats._fields))
                 if return_stats else ())
+            obs_spec = _obs_spec(axis, return_obs)
             fn = shard_map(
                 partial(evolution_lib.fused_scan, problem=problem, cfg=cfg,
                         mig=mig, w2=w2, max_epochs=seg_len, axis=axis,
                         with_stats=return_stats),
                 mesh=mesh,
-                in_specs=(_island_spec(axis), _pool_spec(), P(), P(), P()),
+                in_specs=(_island_spec(axis), _pool_spec(), P(), P(), P(),
+                          obs_spec),
                 out_specs=(_island_spec(axis), _pool_spec(), P(), P(), P(),
-                           stats_spec),
+                           obs_spec, stats_spec),
                 check=False,
             )
             return jax.jit(fn, donate_argnums=(0, 1))
 
         run = evolution_lib.fused_jit(
             problem,
-            ("sharded", cfg, mig, w2, seg_len, axis, mesh, return_stats),
+            ("sharded", cfg, mig, w2, seg_len, axis, mesh, return_stats,
+             return_obs),
             build)
         islands, pool = evolution_lib.unique_buffers(
             (state.islands, state.pool))
-        islands, pool, key, epoch, stopped, seg_stats = run(
-            islands, pool, state.key, state.epoch, state.stopped)
+        islands, pool, key, epoch, stopped, obs, seg_stats = run(
+            islands, pool, state.key, state.epoch, state.stopped, state.obs)
         return state._replace(islands=islands, pool=pool, key=key,
-                              epoch=epoch, stopped=stopped), seg_stats
+                              epoch=epoch, stopped=stopped,
+                              obs=obs), seg_stats
 
     state = evolution_lib.run_segments(
         state, max_epochs, segment_fn, snapshot_every=snapshot_every,
         checkpointer=ckpt, w2=w2, return_stats=return_stats)
+    out = (state.islands, state.pool, state.epoch)
     if return_stats:
-        return state.islands, state.pool, state.epoch, state.stats
-    return state.islands, state.pool, state.epoch
+        out += (state.stats,)
+    if return_obs:
+        out += (obs_lib.harvest(state.obs),)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -266,6 +295,7 @@ def run_fused_sharded_async(mesh: Mesh, problem: Problem,
                             axis: str = "islands",
                             return_stats: bool = False,
                             return_astate: bool = False,
+                            return_obs: bool = False,
                             snapshot_every: Optional[int] = None,
                             snapshot_dir: Optional[str] = None,
                             snapshot_keep: int = 3,
@@ -295,7 +325,8 @@ def run_fused_sharded_async(mesh: Mesh, problem: Problem,
         islands=ish, pool=psh, astate=astate, key=k_loop,
         epoch=jnp.int32(0), stopped=jnp.asarray(False),
         stats=evolution_lib.empty_stats() if return_stats else (),
-        next_uuid=jnp.int32(n_islands))
+        next_uuid=jnp.int32(n_islands),
+        obs=obs_lib.init_obs(n_islands) if return_obs else ())
     if resume:
         if ckpt is None:
             raise ValueError("resume=True needs snapshot_dir or checkpointer")
@@ -311,6 +342,7 @@ def run_fused_sharded_async(mesh: Mesh, problem: Problem,
             stats_spec = (ExperimentStats(
                 *[P()] * len(ExperimentStats._fields))
                 if return_stats else ())
+            obs_spec = _obs_spec(axis, return_obs)
             fn = shard_map(
                 partial(async_lib.fused_scan_async, problem=problem,
                         cfg=cfg, mig=mig, acfg=acfg, w2=w2,
@@ -318,9 +350,10 @@ def run_fused_sharded_async(mesh: Mesh, problem: Problem,
                         with_stats=return_stats),
                 mesh=mesh,
                 in_specs=(_island_spec(axis), _pool_spec(),
-                          _astate_spec(axis), P(), P(), P()),
+                          _astate_spec(axis), P(), P(), P(), obs_spec),
                 out_specs=(_island_spec(axis), _pool_spec(),
-                           _astate_spec(axis), P(), P(), P(), stats_spec),
+                           _astate_spec(axis), P(), P(), P(), obs_spec,
+                           stats_spec),
                 check=False,
             )
             return jax.jit(fn, donate_argnums=(0, 1, 2))
@@ -328,14 +361,16 @@ def run_fused_sharded_async(mesh: Mesh, problem: Problem,
         run = evolution_lib.fused_jit(
             problem,
             ("sharded_async", cfg, mig, acfg, w2, seg_len, axis, mesh,
-             return_stats),
+             return_stats, return_obs),
             build)
         islands, pool, astate = evolution_lib.unique_buffers(
             (state.islands, state.pool, state.astate))
-        islands, pool, astate, key, tick, stopped, seg_stats = run(
-            islands, pool, astate, state.key, state.epoch, state.stopped)
+        islands, pool, astate, key, tick, stopped, obs, seg_stats = run(
+            islands, pool, astate, state.key, state.epoch, state.stopped,
+            state.obs)
         return state._replace(islands=islands, pool=pool, astate=astate,
-                              key=key, epoch=tick, stopped=stopped), seg_stats
+                              key=key, epoch=tick, stopped=stopped,
+                              obs=obs), seg_stats
 
     state = evolution_lib.run_segments(
         state, max_ticks, segment_fn, snapshot_every=snapshot_every,
@@ -345,4 +380,6 @@ def run_fused_sharded_async(mesh: Mesh, problem: Problem,
         out += (state.stats,)
     if return_astate:
         out += (state.astate,)
+    if return_obs:
+        out += (obs_lib.harvest(state.obs),)
     return out

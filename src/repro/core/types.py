@@ -217,6 +217,10 @@ class ExperimentState(NamedTuple):
     key:       () PRNG key — the driver loop's migration-key stream
     epoch:     () int32 — epochs (sync) / ticks (async) completed
     stopped:   () bool — early-success latch (non-W²)
+    obs:       ObsCounters (repro.obs.counters) when the run was asked
+               for observability (``return_obs=True``), else ``()`` —
+               an empty pytree adds no snapshot leaves, so obs-disabled
+               checkpoints are unchanged
 
     Host-managed fields (not in the scan carry, documented as such in the
     coverage meta-test):
@@ -237,3 +241,4 @@ class ExperimentState(NamedTuple):
     stopped: Array
     stats: Any
     next_uuid: Array
+    obs: Any = ()

@@ -209,14 +209,14 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
     if not ok:
         return rec
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     fn, args, mesh, model, _ = build_cell(arch, shape, multi_pod,
                                           accum=accum, sharding=sharding)
     with set_mesh(mesh):
         lowered = fn.lower(*args)
-        t1 = time.time()
+        t1 = time.perf_counter()
         compiled = lowered.compile()
-    t2 = time.time()
+    t2 = time.perf_counter()
     ma = compiled.memory_analysis()
     rec.update(
         lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2),

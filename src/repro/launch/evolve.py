@@ -102,7 +102,7 @@ def run_ea(problem_name: str = "trap", islands: int = 8, epochs: int = 50,
     if bridge:
         host_bridge = (AsyncHostBridge(server, acceptance=acc) if is_async
                        else HostBridge(server, acceptance=acc))
-    t0 = time.time()
+    t0 = time.perf_counter()
     if sharded:
         mesh = make_host_mesh()
         n_shards = mesh.shape["islands"]
@@ -128,7 +128,7 @@ def run_ea(problem_name: str = "trap", islands: int = 8, epochs: int = 50,
         if verbose:
             print(f"[sharded x{n_shards} {'fused ' if fused else ''}"
                   f"{'async ' if is_async else ''}topo={topology}] "
-                  f"best={best} epochs={int(ep)} ({time.time()-t0:.1f}s)")
+                  f"best={best} epochs={int(ep)} ({time.perf_counter()-t0:.1f}s)")
             print(f"final best={best!r} epochs={int(ep)}")
         return isl, pool
     if fused:
@@ -139,7 +139,7 @@ def run_ea(problem_name: str = "trap", islands: int = 8, epochs: int = 50,
         if verbose:
             best = float(jax.device_get(isl.best_fitness.max()))
             print(f"[fused {'async ' if is_async else ''}topo={topology}] "
-                  f"best={best} epochs={int(ep)} ({time.time()-t0:.1f}s)")
+                  f"best={best} epochs={int(ep)} ({time.perf_counter()-t0:.1f}s)")
             print(f"final best={best!r} epochs={int(ep)}")
         return isl, pool
     if is_async:

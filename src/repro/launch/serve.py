@@ -38,21 +38,21 @@ def serve(arch: str, smoke: bool = True, batch: int = 4,
     prefill = jax.jit(lambda p, bb: model.prefill(p, bb, max_seq=max_seq))
     decode = jax.jit(model.decode)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     logits, caches, xkv = prefill(params, b)
     logits.block_until_ready()
-    t_prefill = time.time() - t0
+    t_prefill = time.perf_counter() - t0
 
     tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
     out = [tok]
-    t0 = time.time()
+    t0 = time.perf_counter()
     for t in range(new_tokens - 1):
         idx = jnp.int32(prompt_len + t + cfg.n_meta_tokens)
         logits, caches = decode(params, tok, idx, caches, xkv)
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         out.append(tok)
     jax.block_until_ready(out[-1])
-    t_decode = time.time() - t0
+    t_decode = time.perf_counter() - t0
     toks = jnp.concatenate(out, axis=1)
     if verbose:
         tps = batch * (new_tokens - 1) / max(t_decode, 1e-9)

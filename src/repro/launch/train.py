@@ -88,14 +88,14 @@ def train(arch: str, smoke: bool = True, steps: int = 100, batch: int = 8,
             state = jax.device_put(state, state_shard)
 
     losses = []
-    t0 = time.time()
+    t0 = time.perf_counter()
     with set_mesh(mesh):
         for i in range(start, steps):
             batch_i = loader.next()
             state, metrics = jstep(state, batch_i)
             losses.append(float(metrics["ce"]))
             if verbose and (i % log_every == 0 or i == steps - 1):
-                dt = time.time() - t0
+                dt = time.perf_counter() - t0
                 print(f"step {i:5d} ce={losses[-1]:.4f} "
                       f"gnorm={float(metrics['grad_norm']):.3f} "
                       f"lr={float(metrics['lr']):.2e} [{dt:.1f}s]")

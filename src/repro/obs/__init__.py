@@ -1,0 +1,35 @@
+"""Unified observability layer — counters, trace spans, metrics, timeline.
+
+Three tiers, matching where the data lives:
+
+* :mod:`repro.obs.counters` — **on-device** :class:`ObsCounters`, a pytree
+  carried through the fused drivers' ``lax.scan`` alongside
+  :class:`~repro.core.types.ExperimentState`.  Pure integer accumulation:
+  zero host syncs mid-segment, harvested at snapshot boundaries,
+  bit-for-bit invariant to segmentation and identical across generation
+  engine impls (requires jax — import it only from jax-aware code).
+* :mod:`repro.obs.trace` — **host** wall-clock spans: a thread-safe,
+  ring-buffered :class:`Tracer` exporting Chrome trace-event JSON
+  (open in Perfetto / ``chrome://tracing``).  Stdlib-only.
+* :mod:`repro.obs.metrics` — **server** exposition: the log-spaced
+  mergeable latency histogram (shared with ``benchmarks/server_load.py``)
+  and Prometheus text rendering for ``/metricz``.  Stdlib-only.
+
+``python -m repro.obs`` (:mod:`repro.obs.__main__`) merges trace files +
+harvested counters into a per-run timeline summary.
+
+Everything is **off by default**: tracing no-ops until
+:func:`repro.obs.trace.enable` is called, and counters exist only when a
+driver is asked for them (``return_obs=True``).
+
+This ``__init__`` deliberately imports only the stdlib tiers so the
+jax-free server workers (:mod:`repro.server`, ``benchmarks/server_load``
+subprocesses) can use tracing/metrics without paying — or even having —
+a jax import.  Import :mod:`repro.obs.counters` explicitly where needed.
+"""
+from __future__ import annotations
+
+from . import metrics, trace  # noqa: F401  (stdlib-only tiers)
+from .trace import Tracer, enable, disable, span  # noqa: F401
+
+__all__ = ["Tracer", "enable", "disable", "span", "metrics", "trace"]

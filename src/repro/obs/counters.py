@@ -1,0 +1,132 @@
+"""On-device observability counters, carried through the fused scans.
+
+:class:`ObsCounters` is a small integer pytree that rides in the drivers'
+``lax.scan`` carry next to the island/pool state (and is snapshot-covered
+via ``ExperimentState.obs`` — the static carry<->field pin in
+``repro.analysis.snapshot`` applies to it like any other carried value).
+Everything here is *pure accumulation*: integer adds driven by the same
+masks the runtime already computes, so
+
+* there are **zero host syncs** mid-segment — counters are harvested
+  (:func:`harvest`) at segment/snapshot boundaries only;
+* totals are **bit-for-bit invariant to segmentation** (integer addition
+  is exact and associative — chaining segments is one long scan);
+* with ``acceptance="always"`` the masks are availability/clock-driven,
+  never fitness-driven, so totals are **identical across generation
+  engine impls** (jnp vs pallas vs pallas_ref draw different RNG streams
+  and reach different fitnesses, but fire the same exchanges).
+
+Counter semantics (per island, i32):
+
+fired:        migration exchanges attempted — sync: one per epoch the
+              server was available; async: one per fire with the server
+              up (churned-down islands never fire).
+delivered:    finite immigrants delivered by the topology, pre-gate.
+accepted:     deliveries that survived the acceptance gate (``always``
+              accepts everything: accepted == delivered).
+rejected:     deliveries the gate refused.  By construction
+              ``delivered == accepted + rejected`` — the ledger the CI
+              smoke asserts.  (The async runtime's absorb-time *re*-gate
+              is deliberately not double-counted.)
+churn_down:   ticks spent inside a churn down-window (sync: always 0).
+inbox_age_hist: ``(n, AGE_BINS)`` — age in ticks of each absorbed
+              immigrant, clipped into the last bin.  The sync driver
+              absorbs at delivery (age 0); degenerate async matches it
+              bin-for-bin.
+early_stop_epoch: scalar, the 1-based epoch/tick the early-success latch
+              first fired; -1 while running (or for W² runs, which never
+              stop early).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import Array
+
+AGE_BINS = 8
+
+
+class ObsCounters(NamedTuple):
+    fired: Array            # (n,) i32
+    delivered: Array        # (n,) i32
+    accepted: Array         # (n,) i32
+    rejected: Array         # (n,) i32
+    churn_down: Array       # (n,) i32
+    inbox_age_hist: Array   # (n, AGE_BINS) i32
+    early_stop_epoch: Array  # () i32, -1 = never
+
+
+def init_obs(n_islands: int) -> ObsCounters:
+    z = jnp.zeros((n_islands,), jnp.int32)
+    return ObsCounters(
+        fired=z, delivered=z, accepted=z, rejected=z, churn_down=z,
+        inbox_age_hist=jnp.zeros((n_islands, AGE_BINS), jnp.int32),
+        early_stop_epoch=jnp.int32(-1))
+
+
+def _i32(mask: Array) -> Array:
+    return jnp.asarray(mask).astype(jnp.int32)
+
+
+def record_exchange(obs: ObsCounters, fired: Array, delivered: Array,
+                    accepted: Array) -> ObsCounters:
+    """One migration step's ledger: boolean masks per island."""
+    d, a = _i32(delivered), _i32(accepted)
+    return obs._replace(
+        fired=obs.fired + _i32(fired),
+        delivered=obs.delivered + d,
+        accepted=obs.accepted + a,
+        rejected=obs.rejected + (d - a))
+
+
+def record_churn(obs: ObsCounters, down: Array) -> ObsCounters:
+    return obs._replace(churn_down=obs.churn_down + _i32(down))
+
+
+def record_absorb(obs: ObsCounters, consumed: Array, age: Array,
+                  ) -> ObsCounters:
+    """Histogram the age (in ticks) of each absorbed immigrant."""
+    bins = jnp.clip(jnp.asarray(age, jnp.int32), 0, AGE_BINS - 1)
+    one_hot = (jnp.arange(AGE_BINS, dtype=jnp.int32)[None, :]
+               == bins[:, None]) & jnp.asarray(consumed)[:, None]
+    return obs._replace(inbox_age_hist=obs.inbox_age_hist + _i32(one_hot))
+
+
+def record_early_stop(obs: ObsCounters, stopped: Array, epoch: Array,
+                      ) -> ObsCounters:
+    """Latch the first epoch the stop flag is up (idempotent after)."""
+    fresh = (obs.early_stop_epoch < 0) & jnp.asarray(stopped)
+    return obs._replace(early_stop_epoch=jnp.where(
+        fresh, jnp.asarray(epoch, jnp.int32), obs.early_stop_epoch))
+
+
+def harvest(obs: ObsCounters) -> Dict[str, Any]:
+    """Device -> host: per-island arrays plus summable totals, as plain
+    python/numpy (json-dumpable via ``.tolist()`` on the arrays)."""
+    fired = np.asarray(obs.fired)
+    delivered = np.asarray(obs.delivered)
+    accepted = np.asarray(obs.accepted)
+    rejected = np.asarray(obs.rejected)
+    churn = np.asarray(obs.churn_down)
+    ages = np.asarray(obs.inbox_age_hist)
+    return {
+        "n_islands": int(fired.shape[0]),
+        "fired": fired.tolist(),
+        "delivered": delivered.tolist(),
+        "accepted": accepted.tolist(),
+        "rejected": rejected.tolist(),
+        "churn_down": churn.tolist(),
+        "inbox_age_hist": ages.tolist(),
+        "early_stop_epoch": int(np.asarray(obs.early_stop_epoch)),
+        "totals": {
+            "fired": int(fired.sum()),
+            "delivered": int(delivered.sum()),
+            "accepted": int(accepted.sum()),
+            "rejected": int(rejected.sum()),
+            "churn_down": int(churn.sum()),
+            "inbox_age_hist": ages.sum(axis=0).tolist(),
+        },
+    }

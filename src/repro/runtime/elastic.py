@@ -111,6 +111,11 @@ def resize_experiment(state: ExperimentState, n_islands: int,
 
     Deterministic: the joiner keys are folded out of the carried loop key
     without consuming it, so a resumed-and-resized run stays seeded.
+
+    Observability counters (``state.obs``) are *reset* to zeros at the new
+    island count: per-island telemetry rows have no meaningful identity
+    across a resize (a joiner is not the departed island whose row index
+    it inherits), so the harvest restarts rather than lies.
     """
     dev = jax.tree.map(jnp.asarray, (state.islands, state.pool, state.astate,
                                      state.key, state.next_uuid))
@@ -119,6 +124,9 @@ def resize_experiment(state: ExperimentState, n_islands: int,
     n_now = int(state.islands.pop.shape[0])
     if n_islands == n_now:
         return state
+    if hasattr(state.obs, "_fields"):
+        from repro.obs import counters as obs_lib  # deferred: keep import light
+        state = state._replace(obs=obs_lib.init_obs(n_islands))
     # AsyncState is itself a tuple subclass — the empty sync slot is ()
     has_astate = hasattr(state.astate, "_fields")
     if n_islands < n_now:

@@ -56,6 +56,18 @@ class StragglerMonitor:
                 out.append(w)
         return sorted(out)
 
+    def gauges(self) -> Dict[str, float]:
+        """Current fleet state as Prometheus-style gauges — the shape
+        :meth:`PoolHTTPServer.add_gauge_source` expects, so a co-hosted
+        driver's straggler picture lands in the /metricz scrape."""
+        med = self.median_of_medians()
+        return {
+            "straggler_workers": float(len(self._hist)),
+            "straggler_flagged": float(len(self.stragglers())),
+            "straggler_median_epoch_seconds": float(med or 0.0),
+            "straggler_threshold": float(self.threshold),
+        }
+
     def work_scale(self, worker: int) -> float:
         """Suggested multiplier on generations_per_epoch for this worker
         (1.0 for median workers, <1 for stragglers) — keeps epoch wall time

@@ -7,11 +7,15 @@ the server stays a single auditable file.
 Concurrency model — single event loop + a small worker pool:
 
   * Connection handling, parsing, routing, rate limiting and response
-    writing run on the event loop. Frontend state (metrics counters,
-    the queue-depth gauge) is mutated only in plain sections with no
-    ``await`` inside — atomic under cooperative scheduling (the
-    single-writer ownership the LCK02 invariant permits; see
-    docs/invariants.md).
+    writing run on the event loop. Frontend metrics (request counters,
+    per-verb latency histograms) are mutated from *two* thread
+    populations — the loop increments counters, the executor records
+    verb latencies — so every mutation goes through ``_count``/
+    ``_observe`` under ``_mlock`` (the earlier loop-only
+    ``dict.get``+store pattern became a lost-update race the moment
+    latency recording moved into the executor callable; LCK02 flags
+    the class — see docs/invariants.md). The queue-depth gauge stays
+    loop-confined and lock-free.
   * Pool verbs execute on a ThreadPoolExecutor (default 1 worker): the
     WAL journal write inside :meth:`PoolServer._put` is blocking file
     I/O, and pushing it off-loop keeps accept/parse latency flat while
@@ -34,12 +38,15 @@ import contextlib
 import json
 import re
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 from urllib.parse import parse_qs, urlsplit
 
 from repro.core.async_pool import PoolUnavailable
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 from . import wire
 from .ratelimit import RateLimiter
@@ -86,6 +93,16 @@ def _json_response(status: int, body: Dict[str, Any],
             f"Connection: {'keep-alive' if keep_alive else 'close'}"]
     for k, v in (extra_headers or {}).items():
         head.append(f"{k}: {v}")
+    return ("\r\n".join(head) + "\r\n\r\n").encode() + payload
+
+
+def _text_response(status: int, body: str, content_type: str,
+                   keep_alive: bool = True) -> bytes:
+    payload = body.encode()
+    head = [f"HTTP/1.1 {status} {_STATUS_TEXT.get(status, 'Unknown')}",
+            f"Content-Type: {content_type}",
+            f"Content-Length: {len(payload)}",
+            f"Connection: {'keep-alive' if keep_alive else 'close'}"]
     return ("\r\n".join(head) + "\r\n\r\n").encode() + payload
 
 
@@ -137,7 +154,15 @@ class PoolHTTPServer:
         self._backlog = backlog
         self._limiter = RateLimiter(rate=rate, burst=burst)
         self._queue_depth = 0
+        # metrics are written by the event loop (_count) AND the executor
+        # threads (_observe): every mutation holds _mlock
+        self._mlock = threading.Lock()
         self._metrics: Dict[str, int] = {}
+        self._latency: Dict[str, List[int]] = {}    # verb -> log-bin counts
+        self._latency_sum: Dict[str, float] = {}    # verb -> total ms
+        # extra gauge providers (e.g. StragglerMonitor.gauges) merged into
+        # the /metricz scrape; callables must be thread-safe and cheap
+        self._gauge_sources: List[Callable[[], Dict[str, float]]] = []
         self._exp_lock = asyncio.Lock()
         self._executor = ThreadPoolExecutor(
             max_workers=executor_workers,
@@ -151,7 +176,40 @@ class PoolHTTPServer:
         return f"http://{self.host}:{self.port}"
 
     def _count(self, key: str, n: int = 1) -> None:
-        self._metrics[key] = self._metrics.get(key, 0) + n
+        with self._mlock:
+            self._metrics[key] = self._metrics.get(key, 0) + n
+
+    def _observe(self, verb: str, ms: float) -> None:
+        """Record one verb latency (called from executor threads)."""
+        with self._mlock:
+            h = self._latency.get(verb)
+            if h is None:
+                h = self._latency[verb] = obs_metrics.hist_new()
+            h[obs_metrics.hist_index(ms)] += 1
+            self._latency_sum[verb] = self._latency_sum.get(verb, 0.0) + ms
+
+    def add_gauge_source(self, fn: Callable[[], Dict[str, float]]) -> None:
+        """Register an extra gauge provider (merged into every /metricz
+        scrape) — e.g. ``StragglerMonitor.gauges`` from a co-hosted
+        driver. Must be thread-safe; exceptions are swallowed per-scrape
+        so a broken provider cannot take down the metrics endpoint."""
+        self._gauge_sources.append(fn)
+
+    def _gauges(self) -> Dict[str, float]:
+        out: Dict[str, float] = {
+            "queue_depth": float(self._queue_depth),
+            "max_queue": float(self.max_queue),
+            "rate_limited_clients": float(len(self._limiter)),
+            "ratelimit_rate": float(self._limiter.rate),
+            "ratelimit_burst": float(self._limiter.burst),
+            "experiments": float(len(self.service.experiments())),
+        }
+        for fn in self._gauge_sources:
+            try:
+                out.update(fn())
+            except Exception:  # noqa: BLE001 — a broken provider must not
+                pass           # break the scrape
+        return out
 
     # -- lifecycle ----------------------------------------------------------
     async def start(self) -> "PoolHTTPServer":
@@ -243,8 +301,13 @@ class PoolHTTPServer:
 
         # liveness/metrics bypass throttling — they must answer even
         # (especially) when the service is shedding load
-        if name in ("healthz", "metricz"):
+        if name == "healthz":
             return _json_response(200, self._local_verb(name))
+        if name == "metricz":
+            if query.get("format") == "json":
+                return _json_response(200, self._local_verb(name))
+            return _text_response(200, self._metricz_text(),
+                                  obs_metrics.PROM_CONTENT_TYPE)
 
         client = headers.get("x-client-id") or f"{peer[0]}:{peer[1]}"
         if not self._limiter.allow(client):
@@ -266,10 +329,21 @@ class PoolHTTPServer:
             if not isinstance(parsed, dict):
                 raise ValueError("body must be a JSON object")
             fn = await self._bind_verb(name, groups, query, parsed)
+
+            def timed():
+                # runs on the executor thread: span + latency histogram
+                t0 = time.perf_counter()
+                try:
+                    with obs_trace.span(f"server.{name}"):
+                        return fn()
+                finally:
+                    self._observe(name,
+                                  (time.perf_counter() - t0) * 1e3)
+
             loop = asyncio.get_running_loop()
             self._queue_depth += 1
             try:
-                result = await loop.run_in_executor(self._executor, fn)
+                result = await loop.run_in_executor(self._executor, timed)
             finally:
                 self._queue_depth -= 1
             return _json_response(200, result)
@@ -295,9 +369,26 @@ class PoolHTTPServer:
         if name == "healthz":
             return {"ok": True, "wire_version": wire.WIRE_VERSION,
                     "experiments": len(self.service.experiments())}
-        return {"metrics": dict(sorted(self._metrics.items())),
+        with self._mlock:
+            metrics = dict(sorted(self._metrics.items()))
+            latency = {v: {"count": sum(h),
+                           "p50_ms": obs_metrics.hist_percentile(h, 0.50),
+                           "p99_ms": obs_metrics.hist_percentile(h, 0.99)}
+                       for v, h in sorted(self._latency.items())}
+        return {"metrics": metrics,
+                "latency": latency,
                 "queue_depth": self._queue_depth,
                 "rate_limited_clients": len(self._limiter)}
+
+    def _metricz_text(self) -> str:
+        """One Prometheus text-format scrape (the default /metricz body)."""
+        with self._mlock:
+            counters = dict(self._metrics)
+            hists = {f"verb_{v}_latency": (list(h),
+                                           self._latency_sum.get(v, 0.0))
+                     for v, h in self._latency.items()}
+        return obs_metrics.render_prometheus(
+            counters=counters, gauges=self._gauges(), histograms=hists)
 
     async def _ensure(self, name: str,
                       config: Optional[ExperimentConfig] = None):

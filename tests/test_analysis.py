@@ -527,3 +527,74 @@ def test_static_registry_matrix_matches_runtime():
     static_policies = {r.key[0] for r in regs if r.family == "acceptance"}
     assert static_policies == set(acc_lib.ACCEPTANCE_POLICIES)
     assert static_policies <= set(acc_lib.HOST_MIRRORED)
+
+
+# ---------------------------------------------------------------------------
+# OBS01 — wall-clock durations
+# ---------------------------------------------------------------------------
+def test_obs01_wallclock_duration(tmp_path):
+    res = lint_source(tmp_path, """\
+        import time
+
+        def timed(fn):
+            t0 = time.time()
+            fn()
+            return time.time() - t0
+        """)
+    assert ("OBS01", "mod.py", 6) in rules_at(res)
+
+
+def test_obs01_self_attr_stamp_across_methods(tmp_path):
+    # the stamp-in-one-method, diff-in-another pattern
+    res = lint_source(tmp_path, """\
+        import time
+
+        class Job:
+            def start(self):
+                self._t0 = time.time()
+
+            def elapsed(self):
+                return time.time() - self._t0
+        """)
+    assert any(r == "OBS01" and line == 8
+               for r, _, line in rules_at(res))
+
+
+def test_obs01_clean_perf_counter_twin(tmp_path):
+    res = lint_source(tmp_path, """\
+        import time
+
+        def timed(fn):
+            t0 = time.perf_counter()
+            fn()
+            return time.perf_counter() - t0
+        """)
+    assert not active(res)
+
+
+def test_obs01_timestamp_and_timepoint_are_fine(tmp_path):
+    # wall time as a *timestamp* (journal entry) or a time *point*
+    # (constant offset) is exactly what time.time is for
+    res = lint_source(tmp_path, """\
+        import time
+
+        def stamp(record):
+            record["timestamp"] = time.time()
+            record["yesterday"] = time.time() - 86400
+            return record
+        """)
+    assert not active(res)
+
+
+def test_obs01_rebind_untracks(tmp_path):
+    # a wall variable rebound to a monotonic clock stops being wallish
+    res = lint_source(tmp_path, """\
+        import time
+
+        def timed(fn):
+            t0 = time.time()
+            t0 = time.perf_counter()
+            fn()
+            return time.perf_counter() - t0
+        """)
+    assert not active(res)

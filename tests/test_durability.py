@@ -495,9 +495,9 @@ class TestSnapshotCoverageMeta:
         from repro.analysis import snapshot
         carries = snapshot.scan_carry_names(self._project())
         assert carries["repro.core.evolution.fused_scan"] == \
-            ["islands", "pool", "key", "epoch", "stopped"]
+            ["islands", "pool", "key", "epoch", "stopped", "obs"]
         assert carries["repro.core.async_migration.fused_scan_async"] == \
-            ["islands", "pool", "astate", "key", "tick", "stopped"]
+            ["islands", "pool", "astate", "key", "tick", "stopped", "obs"]
         fields = snapshot.experiment_state_fields(self._project())
         assert fields == list(ExperimentState._fields)
 

@@ -209,7 +209,8 @@ class TestFusedDriver:
         mig = MigrationConfig(topology="ring")
         run_fused(problem, self.CFG, mig, n_islands=4, max_epochs=2,
                   rng=jax.random.key(0))
-        key = (id(problem), ("batched", self.CFG, mig, False, 2, False))
+        key = (id(problem),
+               ("batched", self.CFG, mig, False, 2, False, False))
         import repro.core.evolution as evo
         jitted = evo._FUSED_CACHE[key][1]
         run_fused(problem, self.CFG, mig, n_islands=4, max_epochs=2,

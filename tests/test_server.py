@@ -147,8 +147,50 @@ def test_backpressure_queue_depth():
         assert status == 429 and body["error"] == "server busy"
         assert "retry-after" in headers
         assert _raw(server, "GET", "/healthz")[0] == 200
-        assert _raw(server, "GET", "/metricz")[2]["metrics"][
+        assert _raw(server, "GET", "/metricz?format=json")[2]["metrics"][
             "throttled_queue"] == 1
+
+
+def _raw_text(server, method, path, client_id="golden"):
+    """Raw round trip without JSON-decoding the body (text endpoints)."""
+    conn = http.client.HTTPConnection(server.host, server.port, timeout=10)
+    try:
+        conn.request(method, path, headers={"X-Client-Id": client_id})
+        resp = conn.getresponse()
+        return (resp.status, {k.lower(): v for k, v in resp.getheaders()},
+                resp.read().decode())
+    finally:
+        conn.close()
+
+
+def test_metricz_prometheus_text():
+    """Bare /metricz serves the Prometheus text format with per-verb
+    latency histograms; ?format=json keeps the legacy dict shape."""
+    from repro.obs import metrics as obs_metrics
+
+    with background_server() as server:
+        c = RemotePoolServer(server.url, experiment="mz")
+        c.put(np.ones(4, np.int8), 4.0, uuid=1)
+        c.get_best()
+        c.close()
+        status, headers, text = _raw_text(server, "GET", "/metricz")
+        assert status == 200
+        assert headers["content-type"].startswith("text/plain; version=0.0.4")
+        samples = obs_metrics.parse_prometheus(text)
+        assert samples["repro_requests"] >= 2
+        assert samples["repro_queue_depth"] == 0
+        assert samples["repro_max_queue"] == server.max_queue
+        # per-verb histogram: the PUT landed in exactly the bins the
+        # cumulative +Inf bucket and _count agree on
+        count = samples["repro_verb_put_latency_seconds_count"]
+        assert count >= 1
+        assert samples[
+            'repro_verb_put_latency_seconds_bucket{le="+Inf"}'] == count
+        assert samples["repro_verb_put_latency_seconds_sum"] > 0.0
+        # legacy JSON view still served, now with latency summaries
+        body = _raw(server, "GET", "/metricz?format=json")[2]
+        assert body["metrics"]["requests"] >= 2
+        assert body["latency"]["put"]["count"] == count
 
 
 # ---------------------------------------------------------------------------
